@@ -1,0 +1,34 @@
+"""Render the roofline table from results/dryrun.json (produced by
+`python -m repro.launch.dryrun --all --both-meshes --out results/dryrun.json`).
+This is the §Roofline deliverable: three terms per (arch x shape x mesh),
+dominant bottleneck, MODEL_FLOPS ratio."""
+import json
+import os
+
+
+def run(path: str = "results/dryrun.json") -> list[str]:
+    if not os.path.exists(path):
+        return [f"# {path} missing — run repro.launch.dryrun first"]
+    recs = json.load(open(path))
+    rows = ["arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+            "bottleneck,model_flops,useful_ratio,roofline_frac,peak_mem_GB"]
+    for r in sorted((r for r in recs if r.get("status") == "ok"),
+                    key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rows.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{r['t_compute']:.4e},{r['t_memory']:.4e},"
+            f"{r['t_collective']:.4e},{r['bottleneck']},"
+            f"{r['model_flops']:.3e},{r['useful_flops_ratio']:.3f},"
+            f"{r['roofline_fraction']:.3f},"
+            f"{r['peak_memory_per_device'] / 1e9:.2f}")
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append(f"{r['arch']},{r['shape']},-,SKIP,,,{r['reason']},,,")
+        elif r.get("status") == "error":
+            rows.append(f"{r['arch']},{r['shape']},{r.get('mesh_multi_pod')},"
+                        f"ERROR,,,{r.get('error', '')[:80]},,,")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

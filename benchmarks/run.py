@@ -1,0 +1,43 @@
+"""Benchmark driver: one module per paper table/figure + framework benches.
+
+Each benchmark runs in a subprocess (several force their own host-device
+counts, which must be set before jax initialises).  Output: CSV blocks.
+"""
+import subprocess
+import sys
+import time
+
+BENCHES = [
+    "benchmarks.paper_table1",        # Table 1 / Fig 10 energy model
+    "benchmarks.paper_table2",        # Table 2 configurations
+    "benchmarks.paper_fig11",         # single-core perf/energy, 31 workloads
+    "benchmarks.paper_fig12",         # multi-core weighted speedup + energy
+    "benchmarks.paper_fig13",         # layer-count sensitivity 2/4/8
+    "benchmarks.paper_fig14",         # MPKI vs energy
+    "benchmarks.collective_schedules",# cascaded vs dedicated cross-pod sync
+    "benchmarks.smla_pipe_bench",     # SMLA pipeline kernel
+    "benchmarks.serve_policies",      # MLR vs SLR serving placement
+    "benchmarks.roofline_table",      # §Roofline table from the dry-run
+]
+
+
+def main() -> int:
+    failures = 0
+    for mod in BENCHES:
+        print(f"\n===== {mod} =====", flush=True)
+        t0 = time.time()
+        r = subprocess.run([sys.executable, "-m", mod], capture_output=True,
+                           text=True)
+        dt = time.time() - t0
+        sys.stdout.write(r.stdout)
+        if r.returncode != 0:
+            failures += 1
+            sys.stdout.write(f"[FAILED rc={r.returncode}]\n")
+            sys.stdout.write(r.stderr[-2000:] + "\n")
+        print(f"[{mod}: {dt:.1f}s]", flush=True)
+    print(f"\n{len(BENCHES) - failures}/{len(BENCHES)} benchmarks ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

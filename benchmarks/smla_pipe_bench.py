@@ -1,0 +1,41 @@
+"""SMLA cascaded-pipeline matmul kernel vs. dedicated partitioning vs. the
+XLA monolithic dot.  On this CPU container the comparison is structural
+(identical results, interpret-mode wall time is NOT the TPU profile) —
+see EXPERIMENTS.md §Perf for the dry-run-derived analysis."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.smla_pipe import kernel as K, ref as R
+
+
+def run(m: int = 256, k: int = 1024, n: int = 256, layers: int = 4
+        ) -> list[str]:
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(rng, 2),
+                          (layers, k // layers, n), jnp.float32)
+    ref = R.matmul_striped(x, w)
+    rows = ["impl,max_abs_err,wall_ms_interpret"]
+    for name, fn in [
+        ("cascaded", lambda: K.matmul_cascaded(x, w, interpret=True)),
+        ("dedicated", lambda: K.matmul_dedicated(x, w, interpret=True)),
+        ("xla_dot", lambda: R.matmul_striped(x, w)),
+    ]:
+        out = fn()
+        err = float(jnp.abs(out - ref).max())
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        ms = (time.perf_counter() - t0) * 1e3
+        rows.append(f"{name},{err:.2e},{ms:.1f}")
+    rows.append(f"# VMEM claim per grid step (cascaded): "
+                f"{(128*128 + 128*128 + 128*128) * 4 / 1024:.0f} KiB "
+                f"(x, w-stripe, acc) — one shared stream buffer vs. "
+                f"{layers} private buffers for dedicated")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,35 @@
+"""Drive the SMLA memory-interface simulator with THIS framework's own
+LM-serving memory traffic (the bridge between the two halves of the repo):
+an LM-decode-shaped trace (long KV sweeps + weight streaming) replayed
+against all five paper configurations.
+
+Run:  PYTHONPATH=src python examples/smla_sim.py
+"""
+import numpy as np
+
+from repro.core.smla.analytic import RunResult, run_config
+from repro.core.smla.config import paper_configs
+from repro.core.smla.traces import WorkloadSpec, lm_serving_trace
+from repro.core.smla.engine import simulate
+
+
+def main():
+    print("LM-decode-shaped traffic vs. 3D-DRAM interface "
+          "(4 decode streams/channel):")
+    specs = [WorkloadSpec("lm.decode", 45.0, 0.75)] * 4
+    base = None
+    for name, stack in paper_configs().items():
+        r = run_config(stack, specs, n_req=1200, horizon=80_000)
+        if base is None:
+            base = r
+        speed = float(np.mean(r.ipc / np.maximum(base.ipc, 1e-9)))
+        print(f"  {name:15s} bw={r.bandwidth:6.2f} GB/s  "
+              f"speedup={speed:5.2f}x  E/base={r.energy_nj/base.energy_nj:5.2f}")
+    print("\nTakeaway: decode traffic (high row locality, high intensity) "
+          "saturates the baseline bus; SMLA's simultaneous layer access "
+          "recovers the stacked bandwidth — the same insight our cascaded "
+          "collectives apply to ICI rings.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Logical-axis partitioning rules: param/batch/cache pytrees -> shardings.
+
+One canonical rule table maps parameter leaf paths (dotted names from the
+model init trees) to PartitionSpecs written for the full production mesh
+('pod', 'data', 'model').  ``filter_spec`` then restricts every spec to the
+actual mesh (dropping absent axes and non-divisible shardings), so the same
+rules serve the 512-chip dry-run, small CPU test meshes, and single-device
+smoke tests.
+
+Scheme (DESIGN.md §5): Megatron TP over 'model', FSDP (ZeRO-3: params,
+grads, optimizer state all sharded) over 'data', pure replication over
+'pod' (gradients hierarchically reduced — core/collectives.py).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DP = ("pod", "data")
+FSDP = "data"          # parameter-sharding axis
+TP = "model"
+
+# (regex on the leaf path, spec WITHOUT the stacked leading dim)
+# NOTE embed.tokens is FEATURE-sharded (vocab replicated) and the lookup
+# reshards its output in two single-axis hops (cm.embed_lookup): vocab-dim
+# sharding of a gather operand either hits 'involuntary full
+# rematerialization' (replicates the whole (B,S,d) activation) or an SPMD
+# CHECK crash inside partial-manual regions.  See EXPERIMENTS.md §Dry-run.
+_RULES: list[tuple[str, P]] = [
+    (r"embed\.tokens$",            P(None, (FSDP, TP))),
+    (r"head\.w$",                  P(FSDP, TP)),
+    (r"(attn|self_attn|cross_attn)\.(wq|wk|wv)$", P(FSDP, TP)),
+    (r"(attn|self_attn|cross_attn)\.wo$",         P(TP, FSDP)),
+    (r"(q_norm|k_norm)$",          P()),
+    (r"mlp\.(w_gate|w_up)$",       P(FSDP, TP)),
+    (r"mlp\.w_down$",              P(TP, FSDP)),
+    (r"moe\.router$",              P(FSDP, None)),
+    (r"experts\.(w_gate|w_up)$",   P(TP, FSDP, None)),
+    (r"experts\.w_down$",          P(TP, None, FSDP)),
+    # rwkv6
+    (r"tmix\.w_(r|k|v|g)$",        P(FSDP, TP)),
+    (r"tmix\.w_o$",                P(TP, FSDP)),
+    (r"tmix\.w_decay$",            P(FSDP, None)),
+    (r"tmix\.w_decay2$",           P(None, FSDP)),
+    (r"tmix\.(mu|bonus|ln_x)$",    P()),
+    (r"cmix\.w_(k|r)$",            P(FSDP, TP)),
+    (r"cmix\.w_v$",                P(TP, FSDP)),
+    (r"cmix\.mu$",                 P()),
+    # mamba2
+    (r"mamba\.w_in$",              P(FSDP, TP)),
+    (r"mamba\.conv$",              P(None, TP)),
+    (r"mamba\.w_out$",             P(TP, FSDP)),
+    (r"mamba\.(A_log|D|dt_bias|norm)$", P()),
+    # norms & anything residual-shaped
+    (r"(norm|scale|ln)",           P()),
+]
+
+_STACKED_PREFIXES = ("layers.", "enc.", "dec.", "shared.")
+
+
+def spec_for_param(path: str, ndim: int) -> P:
+    stacked = path.startswith(_STACKED_PREFIXES) and not path.endswith(
+        "final_norm")
+    base = None
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            base = spec
+            break
+    if base is None:
+        base = P()
+    entries = ((None,) if stacked else ()) + tuple(base)
+    entries = entries + (None,) * (ndim - len(entries))
+    return P(*entries[:ndim])
+
+
+def filter_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Restrict spec to mesh axes; drop non-divisible shardings."""
+    names = set(mesh.axis_names)
+    sizes = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a in names and sizes[a] > 1)
+        prod = math.prod(sizes[a] for a in axes) if axes else 1
+        if dim % prod != 0:
+            axes = ()
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def _path_str(kp) -> str:
+    return ".".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def param_specs(params_shape: Any, mesh) -> Any:
+    """pytree of arrays/ShapeDtypeStructs -> pytree of PartitionSpec."""
+    def one(kp, leaf):
+        spec = spec_for_param(_path_str(kp), len(leaf.shape))
+        return filter_spec(spec, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(params_shape: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, mesh))
+
+
+def batch_specs(batch_shape: Any, mesh) -> Any:
+    """tokens/labels (B,S) over dp; positions (3,B,S); enc_embed (B,F,d)."""
+    def one(kp, leaf):
+        name = _path_str(kp)
+        if name == "positions":
+            spec = P(None, DP, None)
+        else:
+            spec = P(DP, *([None] * (len(leaf.shape) - 1)))
+        return filter_spec(spec, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def tree_specs(tree: Any, spec_map, mesh) -> Any:
+    """Apply a {top_level_key: spec} map (e.g. cache_specs) with filtering."""
+    def one(kp, leaf):
+        key = str(getattr(kp[0], "key", kp[0]))
+        spec = spec_map.get(key, P())
+        return filter_spec(spec, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def shardings(tree_of_specs: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree_of_specs, is_leaf=lambda s: isinstance(s, P))
+
+
+def strip_axis(tree_of_specs: Any, axis: str = "model") -> Any:
+    """Remove one mesh axis from every spec (e.g. disable TP: params
+    replicated over 'model'; used by the SLR serving policy and the
+    no-TP perf variants for small models)."""
+    def strip(spec):
+        out = []
+        for e in spec:
+            if e == axis:
+                out.append(None)
+            elif isinstance(e, tuple):
+                kept = tuple(a for a in e if a != axis)
+                out.append(kept if len(kept) > 1 else
+                           (kept[0] if kept else None))
+            else:
+                out.append(e)
+        return P(*out)
+    return jax.tree.map(strip, tree_of_specs,
+                        is_leaf=lambda s: isinstance(s, P))

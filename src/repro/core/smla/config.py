@@ -1,0 +1,153 @@
+"""SMLA stack configuration — the paper's §7 Table 2/3 parameters.
+
+All three IO models (Baseline Wide-IO, Dedicated-IO, Cascaded-IO) and both
+rank organisations (MLR, SLR) are described by one `StackConfig`.
+
+Time unit convention: the simulator works in integer *fast cycles*, where one
+fast cycle = 1 / (layers × base_freq).  For the paper's 4-layer, 200 MHz
+baseline this is 1.25 ns — every quantity in the paper's Table 2 is an exact
+integer multiple of it (20 ns = 16, 5 ns = 4, 16.25 ns = 13, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class IOModel(enum.IntEnum):
+    BASELINE = 0      # conventional Wide-IO: one layer drives the bus at F
+    DEDICATED = 1     # Dedicated-IO: W/L TSVs per layer at L*F
+    CASCADED = 2      # Cascaded-IO: time-multiplexed full bus at L*F
+
+
+class RankOrg(enum.IntEnum):
+    MLR = 0           # Multi-Layer Rank: all layers form one rank
+    SLR = 1           # Single-Layer Rank: each layer is a rank
+
+
+@dataclasses.dataclass(frozen=True)
+class StackConfig:
+    """One 3D-stacked DRAM channel (paper Table 2 global parameters)."""
+    layers: int = 4                 # stacked DRAM dies
+    banks_per_rank: int = 2         # paper: 2 banks/rank
+    io_bits: int = 128              # TSV data bus width per channel
+    base_freq_mhz: float = 200.0    # Wide-IO baseline IO clock (F)
+    request_bytes: int = 64         # cache-line request size
+    io_model: IOModel = IOModel.BASELINE
+    rank_org: RankOrg = RankOrg.SLR
+    # DRAM core (analog-domain) timings in ns — frequency independent (§2.2).
+    t_rcd_ns: float = 13.75
+    t_rp_ns: float = 13.75
+    t_cl_ns: float = 13.75
+    vdd: float = 1.2
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def fast_freq_mhz(self) -> float:
+        """The L*F IO clock SMLA runs at (= F for the baseline's data rate)."""
+        return self.base_freq_mhz * self.layers
+
+    @property
+    def unit_ns(self) -> float:
+        """One fast cycle in ns — the simulator's integer time unit."""
+        return 1e3 / self.fast_freq_mhz
+
+    @property
+    def n_ranks(self) -> int:
+        if self.io_model == IOModel.BASELINE:
+            return self.layers          # Wide-IO: each layer its own rank (Table 2)
+        return 1 if self.rank_org == RankOrg.MLR else self.layers
+
+    @property
+    def banks_total(self) -> int:
+        return self.n_ranks * self.banks_per_rank
+
+    @property
+    def request_beats_full_bus(self) -> int:
+        """Beats needed for one request on the full-width bus."""
+        return (self.request_bytes * 8) // self.io_bits
+
+    def transfer_cycles(self, rank: int = 0) -> int:
+        """Bus occupancy (fast cycles) for one 64B request — paper Table 2.
+
+        BASELINE          : 4 beats at F      -> 4*L fast cycles (20 ns)
+        DEDICATED/CASC MLR: 4 beats at L*F    -> 4 fast cycles   (5 ns)
+        DEDICATED SLR     : 16 beats (W/L bus) at L*F -> 16      (20 ns)
+        CASCADED SLR      : (beats-1)*L + 1 + rank               (16.25 ns
+                            bottom ... 20 ns top: slots + cut-through hops;
+                            avg 18.1 ns = paper Table 2 footnote)
+        """
+        beats = self.request_beats_full_bus
+        if self.io_model == IOModel.BASELINE:
+            return beats * self.layers
+        if self.rank_org == RankOrg.MLR:
+            return beats
+        if self.io_model == IOModel.DEDICATED:
+            return beats * self.layers   # narrow dedicated group, same 20 ns
+        # CASCADED SLR: rank r uses slot r of every L-cycle rotation; the
+        # transfer spans (beats-1) rotations plus the final slot, and layer
+        # r's data takes r cut-through hops to reach the bottom (SS4.2.1).
+        return (beats - 1) * self.layers + 1 + rank
+
+    def layer_freq_mhz(self, layer: int) -> float:
+        """Per-layer IO clock (§4.2.1).
+
+        BASELINE: every layer at F.  DEDICATED: every layer at L*F.
+        CASCADED: lower half at L*F, next quarter at L*F/2, ... top at F
+        (divide-by-two clock counters).
+        """
+        if self.io_model == IOModel.BASELINE:
+            return self.base_freq_mhz
+        if self.io_model == IOModel.DEDICATED:
+            return self.fast_freq_mhz
+        L = self.layers
+        f = self.fast_freq_mhz
+        # Walk the power-of-two tiers from the bottom: layers [0, L/2) at L*F,
+        # [L/2, 3L/4) at L*F/2, ..., topmost layer at F.
+        remaining, lo = L, 0
+        while remaining > 1:
+            half = remaining // 2
+            if layer < lo + half or f == self.base_freq_mhz:
+                return f
+            lo += half
+            remaining -= half
+            f = max(f / 2.0, self.base_freq_mhz)
+        return max(f, self.base_freq_mhz)
+
+    @property
+    def peak_bandwidth_gbps(self) -> float:
+        """Peak data bandwidth in GB/s (paper Table 2: 3.2 base / 12.8 SMLA)."""
+        eff_freq = (self.base_freq_mhz if self.io_model == IOModel.BASELINE
+                    else self.fast_freq_mhz)
+        return self.io_bits / 8 * eff_freq * 1e6 / 1e9
+
+    def ns_to_cycles(self, ns: float) -> int:
+        return int(round(ns / self.unit_ns))
+
+    @property
+    def t_rcd(self) -> int:
+        return self.ns_to_cycles(self.t_rcd_ns)
+
+    @property
+    def t_rp(self) -> int:
+        return self.ns_to_cycles(self.t_rp_ns)
+
+    @property
+    def t_cl(self) -> int:
+        return self.ns_to_cycles(self.t_cl_ns)
+
+
+# The paper's evaluated configurations (Table 2), as a registry.
+def paper_configs(layers: int = 4) -> dict[str, StackConfig]:
+    return {
+        "baseline": StackConfig(layers=layers, io_model=IOModel.BASELINE,
+                                rank_org=RankOrg.SLR),
+        "dedicated_mlr": StackConfig(layers=layers, io_model=IOModel.DEDICATED,
+                                     rank_org=RankOrg.MLR),
+        "dedicated_slr": StackConfig(layers=layers, io_model=IOModel.DEDICATED,
+                                     rank_org=RankOrg.SLR),
+        "cascaded_mlr": StackConfig(layers=layers, io_model=IOModel.CASCADED,
+                                    rank_org=RankOrg.MLR),
+        "cascaded_slr": StackConfig(layers=layers, io_model=IOModel.CASCADED,
+                                    rank_org=RankOrg.SLR),
+    }

@@ -1,0 +1,230 @@
+"""Cycle-level 3D-stacked DRAM simulator (the paper's evaluation vehicle),
+as a single vectorised `lax.scan` over fast cycles.
+
+Time unit: one *fast cycle* = 1 / (L * F)  (1.25 ns for the paper's 4-layer,
+200 MHz Wide-IO baseline) — every Table-2 quantity is an integer multiple.
+
+Modelled per channel:
+* banks: open row + busy-until, tRP/tRCD/tCL from StackConfig,
+* FR-FCFS controller (row hits first, then oldest; one command per cycle),
+* IO models (paper §4/§5):
+    BASELINE        one full-width bus, one rank at a time, 4L cycles/req
+    DEDICATED MLR   full-width transfer at L*F: L cycles/req (5 ns)
+    DEDICATED SLR   per-rank W/L-wide dedicated group: 4L cycles/req (20 ns)
+    CASCADED  MLR   full bus time slots: L cycles/req
+    CASCADED  SLR   rank r owns slot (t mod L == r): (beats-1)*L+1 cycles
+* cores: 3-wide 3.2 GHz, MSHR-limited, instruction-window runahead —
+  the paper's Table-3 core model.  IPC is measured in core cycles.
+
+The step function is built per StackConfig (static io model / rank count)
+and jit-compiled once; workloads vmap over the leading trace axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.smla.config import IOModel, RankOrg, StackConfig
+
+BIG = jnp.int32(2**30)
+Q_SIZE = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreParams:
+    mshr: int = 8
+    window: float = 128.0        # instruction-window runahead
+    inst_per_fast_cycle: float = 12.0   # 3-wide * 3.2GHz * 1.25ns
+
+
+def _layer_of_rank(stack: StackConfig):
+    """Which physical layer(s) serve rank r — for energy attribution."""
+    if stack.n_ranks == stack.layers:
+        return "one"     # SLR/baseline: rank r == layer r
+    return "all"         # MLR: a request touches every layer
+
+
+def simulate(stack: StackConfig, traces: dict, horizon: int,
+             core: CoreParams = CoreParams()) -> dict:
+    """traces: dict of (C, n_req) arrays (inst f32; rank/bank/row i32).
+    Returns metrics dict of scalars / per-core arrays (all jnp)."""
+    n_cores, n_req = traces["inst"].shape
+    R, B, L = stack.n_ranks, stack.banks_per_rank, stack.layers
+    t_rcd, t_rp, t_cl = stack.t_rcd, stack.t_rp, stack.t_cl
+    io, org = stack.io_model, stack.rank_org
+
+    # per-rank transfer duration and slot alignment
+    dur = np.array([stack.transfer_cycles(r) for r in range(R)], np.int32)
+    slotted = (io == IOModel.CASCADED and org == RankOrg.SLR and R > 1)
+    # bus groups: which ranks contend on the same bus resource
+    if io == IOModel.BASELINE:
+        n_groups, group_of_rank = 1, np.zeros(R, np.int32)
+    elif org == RankOrg.MLR:
+        n_groups, group_of_rank = 1, np.zeros(R, np.int32)
+    else:  # SLR dedicated (true groups) or cascaded (disjoint time slots)
+        n_groups, group_of_rank = R, np.arange(R, dtype=np.int32)
+    group_of_rank = jnp.asarray(group_of_rank)
+    dur = jnp.asarray(dur)
+
+    tr_inst = jnp.asarray(traces["inst"], jnp.float32)
+    tr_rank = jnp.asarray(traces["rank"], jnp.int32) % R
+    tr_bank = jnp.asarray(traces["bank"], jnp.int32) % B
+    tr_row = jnp.asarray(traces["row"], jnp.int32)
+
+    def step(st, t):
+        (qv, qc, qr, qb, qrow, qinst, qarr, qphase, qready, qdone,
+         bank_busy, bank_row, grp_busy, c_inst, c_next, c_out,
+         served, c_finish, n_act, n_conflict, bus_cycles) = st
+        t = t.astype(jnp.int32)
+
+        # ---- 1. enqueue (round-robin one core per cycle) ----------------
+        cid = t % n_cores
+        nxt = c_next[cid]
+        has_req = nxt < n_req
+        idx = jnp.minimum(nxt, n_req - 1)
+        arrived = tr_inst[cid, idx] <= c_inst[cid]
+        mshr_ok = c_out[cid] < core.mshr
+        free_slot = jnp.argmin(qv)          # first False
+        slot_ok = ~qv[free_slot]
+        do_enq = has_req & arrived & mshr_ok & slot_ok
+
+        qv = qv.at[free_slot].set(jnp.where(do_enq, True, qv[free_slot]))
+        qc = qc.at[free_slot].set(jnp.where(do_enq, cid, qc[free_slot]))
+        qr = qr.at[free_slot].set(
+            jnp.where(do_enq, tr_rank[cid, idx], qr[free_slot]))
+        qb = qb.at[free_slot].set(
+            jnp.where(do_enq, tr_bank[cid, idx], qb[free_slot]))
+        qrow = qrow.at[free_slot].set(
+            jnp.where(do_enq, tr_row[cid, idx], qrow[free_slot]))
+        qinst = qinst.at[free_slot].set(
+            jnp.where(do_enq, tr_inst[cid, idx], qinst[free_slot]))
+        qarr = qarr.at[free_slot].set(jnp.where(do_enq, t, qarr[free_slot]))
+        qphase = qphase.at[free_slot].set(
+            jnp.where(do_enq, 1, qphase[free_slot]))
+        c_next = c_next.at[cid].add(jnp.where(do_enq, 1, 0))
+        c_out = c_out.at[cid].add(jnp.where(do_enq, 1, 0))
+
+        # ---- 2. FR-FCFS issue (one command per cycle) --------------------
+        b_busy = bank_busy[qr, qb] <= t
+        cand = qv & (qphase == 1) & b_busy
+        open_row = bank_row[qr, qb]
+        hit = open_row == qrow
+        closed = open_row < 0
+        # score: hits first, then age (smaller arrival = older)
+        score = jnp.where(cand,
+                          jnp.where(hit, BIG, 0) - qarr, -BIG)
+        pick = jnp.argmax(score)
+        can_issue = cand[pick]
+        lat = jnp.where(hit[pick], t_cl,
+                        jnp.where(closed[pick], t_rcd + t_cl,
+                                  t_rp + t_rcd + t_cl)).astype(jnp.int32)
+        ready = t + lat
+        pr, pb = qr[pick], qb[pick]
+        bank_busy = bank_busy.at[pr, pb].set(
+            jnp.where(can_issue, ready, bank_busy[pr, pb]))
+        bank_row = bank_row.at[pr, pb].set(
+            jnp.where(can_issue, qrow[pick], bank_row[pr, pb]))
+        qphase = qphase.at[pick].set(jnp.where(can_issue, 2, qphase[pick]))
+        qready = qready.at[pick].set(jnp.where(can_issue, ready,
+                                               qready[pick]))
+        n_act = n_act + jnp.where(can_issue & ~hit[pick], 1, 0)
+        n_conflict = n_conflict + jnp.where(
+            can_issue & ~hit[pick] & ~closed[pick], 1, 0)
+
+        # ---- 3. bus grant (one start per group per cycle) ----------------
+        qphase = jnp.where(qv & (qphase == 2) & (qready <= t), 3, qphase)
+        for g in range(n_groups):
+            in_g = group_of_rank[qr] == g
+            cand3 = qv & (qphase == 3) & in_g
+            if slotted:
+                # rank g may start only in its slot
+                cand3 = cand3 & ((t % L) == (qr % L))
+            cand3 = cand3 & (grp_busy[g] <= t)
+            score3 = jnp.where(cand3, -qarr, -BIG)
+            p3 = jnp.argmax(score3)
+            go = cand3[p3]
+            d = dur[qr[p3]]
+            grp_busy = grp_busy.at[g].set(jnp.where(go, t + d, grp_busy[g]))
+            qphase = qphase.at[p3].set(jnp.where(go, 4, qphase[p3]))
+            qdone = qdone.at[p3].set(jnp.where(go, t + d, qdone[p3]))
+            bus_cycles = bus_cycles + jnp.where(go, d, 0)
+
+        # ---- 4. retire ----------------------------------------------------
+        fin = qv & (qphase == 4) & (qdone <= t)
+        served = served + jax.ops.segment_sum(
+            jnp.where(fin, 1, 0), qc, num_segments=n_cores)
+        c_finish = jnp.maximum(c_finish, jax.ops.segment_max(
+            jnp.where(fin, t, -1), qc, num_segments=n_cores))
+        c_out = c_out - jax.ops.segment_sum(
+            jnp.where(fin, 1, 0), qc, num_segments=n_cores)
+        qv = qv & ~fin
+        qphase = jnp.where(fin, 0, qphase)
+
+        # ---- 5. core progress ---------------------------------------------
+        # oldest outstanding instruction per core (window limiter)
+        inst_or_big = jnp.where(qv, qinst, jnp.float32(1e30))
+        oldest = jax.ops.segment_min(inst_or_big, qc, num_segments=n_cores)
+        oldest = jnp.minimum(oldest, jnp.float32(1e30))
+        window_ok = (c_inst - oldest) < core.window
+        nxt_inst = jnp.where(c_next < n_req,
+                             tr_inst[jnp.arange(n_cores),
+                                     jnp.minimum(c_next, n_req - 1)],
+                             jnp.float32(1e30))
+        c_inst = jnp.minimum(
+            c_inst + jnp.where(window_ok, core.inst_per_fast_cycle, 0.0),
+            nxt_inst)
+
+        return (qv, qc, qr, qb, qrow, qinst, qarr, qphase, qready, qdone,
+                bank_busy, bank_row, grp_busy, c_inst, c_next, c_out,
+                served, c_finish, n_act, n_conflict, bus_cycles), None
+
+    def run():
+        st = (jnp.zeros(Q_SIZE, bool), jnp.zeros(Q_SIZE, jnp.int32),
+              jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
+              jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.float32),
+              jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
+              jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
+              jnp.zeros((R, B), jnp.int32),
+              -jnp.ones((R, B), jnp.int32),
+              jnp.zeros(n_groups, jnp.int32),
+              jnp.zeros(n_cores, jnp.float32),
+              jnp.zeros(n_cores, jnp.int32), jnp.zeros(n_cores, jnp.int32),
+              jnp.zeros(n_cores, jnp.int32),
+              jnp.zeros(n_cores, jnp.int32),
+              jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+              jnp.zeros((), jnp.int32))
+        final, _ = jax.lax.scan(step, st, jnp.arange(horizon))
+        return final
+
+    final = jax.jit(run)()
+    (qv, qc, qr, qb, qrow, qinst, qarr, qphase, qready, qdone,
+     bank_busy, bank_row, grp_busy, c_inst, c_next, c_out,
+     served, c_finish, n_act, n_conflict, bus_cycles) = final
+
+    t_ns = horizon * stack.unit_ns
+    complete = served >= n_req                         # per-core fixed work
+    # fixed-work IPC: total trace instructions / per-core completion time
+    finish_ns = jnp.maximum(c_finish, 1) * stack.unit_ns
+    total_inst = tr_inst[:, -1]
+    ipc = jnp.where(complete, total_inst / (finish_ns * 3.2),
+                    c_inst / (t_ns * 3.2))             # fallback: horizon
+    makespan_ns = jnp.max(jnp.where(complete, finish_ns, t_ns))
+    bw = served.sum() * stack.request_bytes / makespan_ns  # GB/s over work
+    return {
+        "ipc": ipc,
+        "served": served,
+        "complete": complete,
+        "bandwidth_gbps": bw,
+        "n_act": n_act,
+        "n_row_conflicts": n_conflict,
+        "bus_util": bus_cycles / jnp.maximum(
+            (makespan_ns / stack.unit_ns) * max(n_groups, 1), 1),
+        "horizon_ns": jnp.float32(t_ns),
+        "makespan_ns": makespan_ns,
+        "inst": c_inst,
+    }

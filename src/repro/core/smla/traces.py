@@ -1,0 +1,92 @@
+"""Synthetic memory-request traces.
+
+The paper drives its simulator with Pin traces of 31 SPEC CPU2006 / TPC /
+STREAM applications.  Those traces are not available offline, so we generate
+parameterised synthetic stand-ins spanning the same characteristics space:
+MPKI (memory intensity), row-buffer locality, and bank/rank spread.  The
+workload suite below covers the paper's reported MPKI range (<1 up to >50,
+Fig. 11/14); per-"application" results are therefore qualitative stand-ins
+while suite-average trends are the comparison target (EXPERIMENTS.md §Paper).
+
+Trace format: int32 arrays (n_req,) per field + float32 instruction index.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    name: str
+    mpki: float          # misses per kilo-instruction
+    row_hit: float       # P(next access falls in the open row)
+    bank_spread: float = 1.0   # 1 = uniform banks; <1 = favours few banks
+
+
+# 31 stand-ins spanning the paper's workload space (SPEC/TPC/STREAM-like).
+WORKLOADS: list[WorkloadSpec] = [
+    WorkloadSpec("low.01", 0.3, 0.70), WorkloadSpec("low.02", 0.5, 0.60),
+    WorkloadSpec("low.03", 0.8, 0.55), WorkloadSpec("low.04", 1.1, 0.65),
+    WorkloadSpec("low.05", 1.6, 0.50), WorkloadSpec("low.06", 2.2, 0.60),
+    WorkloadSpec("low.07", 3.0, 0.45), WorkloadSpec("mid.01", 4.0, 0.55),
+    WorkloadSpec("mid.02", 5.0, 0.40), WorkloadSpec("mid.03", 6.5, 0.50),
+    WorkloadSpec("mid.04", 8.0, 0.35), WorkloadSpec("mid.05", 10.0, 0.45),
+    WorkloadSpec("mid.06", 12.0, 0.30), WorkloadSpec("mid.07", 14.0, 0.40),
+    WorkloadSpec("mid.08", 16.0, 0.35), WorkloadSpec("mid.09", 18.0, 0.50),
+    WorkloadSpec("high.01", 20.0, 0.30), WorkloadSpec("high.02", 23.0, 0.45),
+    WorkloadSpec("high.03", 26.0, 0.25), WorkloadSpec("high.04", 29.0, 0.40),
+    WorkloadSpec("high.05", 32.0, 0.30), WorkloadSpec("high.06", 35.0, 0.50),
+    WorkloadSpec("high.07", 38.0, 0.25), WorkloadSpec("high.08", 41.0, 0.35),
+    WorkloadSpec("high.09", 44.0, 0.30), WorkloadSpec("high.10", 47.0, 0.20),
+    WorkloadSpec("stream.1", 50.0, 0.85), WorkloadSpec("stream.2", 55.0, 0.80),
+    WorkloadSpec("stream.3", 60.0, 0.90), WorkloadSpec("tpc.1", 22.0, 0.15),
+    WorkloadSpec("tpc.2", 28.0, 0.10),
+]
+
+
+def synthetic_trace(seed: int, spec: WorkloadSpec, n_req: int,
+                    n_ranks: int, n_banks: int, n_rows: int = 4096) -> dict:
+    """One core's request stream."""
+    rng = np.random.default_rng(seed)
+    mean_gap = 1000.0 / spec.mpki
+    gaps = rng.exponential(mean_gap, size=n_req) + 1.0
+    inst = np.cumsum(gaps).astype(np.float32)
+
+    rank = rng.integers(0, n_ranks, size=n_req)
+    if spec.bank_spread >= 1.0:
+        bank = rng.integers(0, n_banks, size=n_req)
+    else:
+        p = np.exp(-np.arange(n_banks) / max(spec.bank_spread * n_banks, .5))
+        bank = rng.choice(n_banks, size=n_req, p=p / p.sum())
+    row = np.empty(n_req, np.int64)
+    cur = rng.integers(0, n_rows, size=(n_ranks, n_banks))
+    stay = rng.random(n_req) < spec.row_hit
+    fresh = rng.integers(0, n_rows, size=n_req)
+    for i in range(n_req):
+        r, b = rank[i], bank[i]
+        if not stay[i]:
+            cur[r, b] = fresh[i]
+        row[i] = cur[r, b]
+    return {"inst": inst,
+            "rank": rank.astype(np.int32),
+            "bank": bank.astype(np.int32),
+            "row": row.astype(np.int32)}
+
+
+def core_traces(seed: int, specs: list[WorkloadSpec], n_req: int,
+                n_ranks: int, n_banks: int) -> dict:
+    """Stack per-core traces -> dict of (C, n_req) arrays."""
+    ts = [synthetic_trace(seed + 97 * i, s, n_req, n_ranks, n_banks)
+          for i, s in enumerate(specs)]
+    return {k: np.stack([t[k] for t in ts]) for k in ts[0]}
+
+
+def lm_serving_trace(seed: int, n_req: int, n_ranks: int, n_banks: int,
+                     kv_fraction: float = 0.7) -> dict:
+    """A trace shaped like LM decode traffic: long sequential KV-cache
+    sweeps (high row locality) interleaved with weight streaming — used to
+    drive the simulator from this framework's own workloads."""
+    spec = WorkloadSpec("lm.decode", 45.0, 0.9 * kv_fraction + 0.05)
+    return synthetic_trace(seed, spec, n_req, n_ranks, n_banks)

@@ -1,0 +1,20 @@
+"""jit'd wrapper for flash-decode (no grads needed on the decode path)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import kernel as K
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, bk: int = 256):
+    """Model layout: q (B, 1, Hq, hd); caches (B, S, Hkv, hd); lengths (B,).
+    Returns (B, 1, Hq, hd)."""
+    b, _, hq, hd = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    qk = q[:, 0].reshape(b, hkv, g, hd)
+    kt = k_cache.transpose(0, 2, 1, 3)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    out = K.decode_attention(qk, kt, vt, lengths, bk=bk,
+                             interpret=jax.default_backend() != "tpu")
+    return out.reshape(b, 1, hq, hd)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attend(q, k_cache, v_cache, lengths):
+    """q (B, Hkv, G, hd); caches (B, Hkv, S, hd); lengths (B,) valid prefix.
+    Returns (B, Hkv, G, hd)."""
+    b, hkv, g, hd = q.shape
+    s = k_cache.shape[2]
+    scores = jnp.einsum("bkgh,bksh->bkgs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / math.sqrt(hd)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", probs,
+                     v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,52 @@
+"""jit'd public wrapper: model layout (B,S,H,hd), custom_vjp through the
+forward + backward Pallas kernels.  interpret=True on non-TPU backends
+(kernel body executed in Python on CPU — the validation mode)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _fa(q, k, v, causal, bq, bk):
+    o, _ = K.flash_attention_fwd(q, k, v, causal=causal, bq=bq, bk=bk,
+                                 interpret=_interpret_default())
+    return o
+
+
+def _fa_fwd(q, k, v, causal, bq, bk):
+    o, lse = K.flash_attention_fwd(q, k, v, causal=causal, bq=bq, bk=bk,
+                                   interpret=_interpret_default())
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(causal, bq, bk, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = K.flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                       bq=bq, bk=bk,
+                                       interpret=_interpret_default())
+    return dq, dk, dv
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128):
+    """Model layout entry point: q (B,S,Hq,hd), k/v (B,S,Hkv,hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    s = q.shape[1]
+    bq = min(bq, s)
+    bk = min(bk, s)
+    o = _fa(qt, kt, vt, causal, bq, bk)
+    return o.transpose(0, 2, 1, 3)

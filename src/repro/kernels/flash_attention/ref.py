@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (GQA, causal or full)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, *, causal: bool = True):
+    """q (B, Hq, S, hd); k/v (B, Hkv, S, hd) -> (out, lse).
+
+    out (B, Hq, S, hd); lse (B, Hq, S) = logsumexp of scaled scores."""
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bkgqh,bksh->bkgqs", qg, k.astype(jnp.float32))
+    scores = scores * scale
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    lse = jax.nn.logsumexp(scores, axis=-1)
+    probs = jnp.exp(scores - lse[..., None])
+    out = jnp.einsum("bkgqs,bksh->bkgqh", probs, v.astype(jnp.float32))
+    return (out.reshape(b, hq, s, hd).astype(q.dtype),
+            lse.reshape(b, hq, s))

@@ -1,0 +1,22 @@
+"""jit'd wrappers for the SMLA pipeline matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.smla_pipe import kernel as K
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_cascaded(x, w, bm: int = 128, bn: int = 128, bk: int = 128):
+    return K.matmul_cascaded(x, w, bm=bm, bn=bn, bk=bk, interpret=_interp())
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_dedicated(x, w, bm: int = 128, bn: int = 128, bk: int = 128):
+    return K.matmul_dedicated(x, w, bm=bm, bn=bn, bk=bk, interpret=_interp())

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the SMLA cascaded-pipeline matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_striped(x, w):
+    """x (M, K); w (L, K//L, N) — weights striped across L 'layers'.
+    out = x @ concat(w) : (M, N) f32."""
+    l, kpl, n = w.shape
+    wk = w.reshape(l * kpl, n)
+    return jnp.dot(x.astype(jnp.float32), wk.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)

@@ -1,0 +1,52 @@
+"""jit'd wrapper for the WKV6 kernel.  Forward runs the Pallas kernel;
+gradients recompute through the (differentiable) chunked jnp path from
+models/rwkv6 — correct everywhere, kernel-accelerated forward on TPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6 import kernel as K
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def wkv6_with_state(r, k, v, logw, u, chunk=64):
+    """Forward kernel returning (y, final_state) — prefill path (no vjp)."""
+    y, st = K.wkv6(r.astype(jnp.float32), k.astype(jnp.float32),
+                   v.astype(jnp.float32), logw.astype(jnp.float32),
+                   u.astype(jnp.float32), chunk=chunk,
+                   interpret=_interpret_default())
+    return y.astype(r.dtype), st
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def wkv6(r, k, v, logw, u, chunk=64):
+    return wkv6_with_state(r, k, v, logw, u, chunk)[0]
+
+
+def _ref_chunked(r, k, v, logw, u, chunk):
+    """(B,H,S,hd) wrapper over models.rwkv6.wkv_chunked ((B,S,H,hd))."""
+    from repro.models.rwkv6 import wkv_chunked
+    tr = lambda a: a.transpose(0, 2, 1, 3)
+    b, h, s, hd = r.shape
+    state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, y = wkv_chunked(tr(r), tr(k), tr(v), tr(logw), u, state, chunk=chunk)
+    return tr(y)
+
+
+def _fwd(r, k, v, logw, u, chunk):
+    return wkv6(r, k, v, logw, u, chunk), (r, k, v, logw, u)
+
+
+def _bwd(chunk, res, dy):
+    r, k, v, logw, u = res
+    _, vjp = jax.vjp(lambda *a: _ref_chunked(*a, chunk), r, k, v, logw, u)
+    return vjp(dy)
+
+
+wkv6.defvjp(_fwd, _bwd)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the WKV6 recurrence (sequential scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv(r, k, v, logw, u, state):
+    """All of r/k/v/logw (B, H, S, hd) f32; u (H, hd); state (B, H, hd, hd)
+    [k-dim, v-dim].  Returns (state', y (B, H, S, hd))."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                     # (B, H, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = (jnp.einsum("bhk,bhkv->bhv", r_t, s)
+             + jnp.einsum("bhk,bhk->bh", r_t, u[None] * k_t)[..., None] * v_t)
+        s = s * jnp.exp(w_t)[..., None] + kv
+        return s, y
+
+    xs = jax.tree.map(lambda a: a.transpose(2, 0, 1, 3), (r, k, v, logw))
+    state, ys = jax.lax.scan(step, state, xs)
+    return state, ys.transpose(1, 2, 0, 3)

@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh with ShapeDtypeStruct inputs (zero allocation), print
+memory_analysis / cost_analysis, and record roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+
+Success criterion (assignment): .lower().compile() succeeds for every cell
+on the (16,16) single-pod mesh AND the (2,16,16) multi-pod mesh.
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs import (ParallelConfig, SHAPES, applicable_shapes,
+                           get_config, skipped_shapes)
+from repro.configs.archs import ALL_ARCHS
+from repro.core import partitioning as part
+from repro.launch import hlo_walk, jaxpr_cost
+from repro.launch import mesh as mesh_mod
+from repro.launch import roofline as rl
+from repro.train.step import init_state, make_train_step, state_specs
+
+
+def build_train_cell(cfg, shape, mesh, pcfg):
+    state_shape = jax.eval_shape(
+        functools.partial(init_state, jax.random.PRNGKey(0), cfg))
+    sspecs = state_specs(state_shape, mesh)
+    if not pcfg.tensor_parallel:
+        sspecs = part.strip_axis(sspecs, "model")
+    s_shardings = part.shardings(
+        jax.tree.map(lambda sp, leaf: part.filter_spec(sp, leaf.shape, mesh),
+                     sspecs, state_shape,
+                     is_leaf=lambda x: isinstance(x, P)), mesh)
+    batch_shape = models.input_specs(cfg, shape.global_batch, shape.seq_len,
+                                     "train")
+    b_shardings = part.shardings(part.batch_specs(batch_shape, mesh), mesh)
+    step = make_train_step(cfg, pcfg, mesh)
+    fn = jax.jit(step, in_shardings=(s_shardings, b_shardings),
+                 donate_argnums=(0,))
+    return fn, step, (state_shape, batch_shape)
+
+
+def _param_shardings(cfg, mesh, pcfg=None):
+    model = models.get_model(cfg)
+    p_shape = jax.eval_shape(
+        functools.partial(model.init, cfg=cfg), jax.random.PRNGKey(0))
+    specs = part.param_specs(p_shape, mesh)
+    if pcfg is not None and not pcfg.tensor_parallel:
+        specs = part.strip_axis(specs, "model")
+    return p_shape, part.shardings(specs, mesh)
+
+
+def build_serve_cell(cfg, shape, mesh, pcfg, kind):
+    model = models.get_model(cfg)
+    long_ctx = shape.seq_len >= 262_144
+    model_size = int(mesh.shape["model"])
+    p_shape, p_shardings = _param_shardings(cfg, mesh, pcfg)
+    cache_shape = jax.eval_shape(functools.partial(
+        model.init_cache, cfg, shape.global_batch, shape.seq_len, pcfg))
+    cspec_map = model.cache_specs(cfg, pcfg, long_ctx, model_size)
+    c_specs = part.tree_specs(cache_shape, cspec_map, mesh)
+    c_shardings = part.shardings(c_specs, mesh)
+
+    if kind == "prefill":
+        batch_shape = models.input_specs(cfg, shape.global_batch,
+                                         shape.seq_len, "prefill")
+        b_shardings = part.shardings(part.batch_specs(batch_shape, mesh),
+                                     mesh)
+
+        def prefill_fn(params, batch, cache):
+            return model.prefill(params, batch, cache, cfg, pcfg)
+
+        fn = jax.jit(prefill_fn,
+                     in_shardings=(p_shardings, b_shardings, c_shardings),
+                     donate_argnums=(2,))
+        return fn, prefill_fn, (p_shape, batch_shape, cache_shape)
+
+    tok_shape = models.input_specs(cfg, shape.global_batch, shape.seq_len,
+                                   "decode")["tokens"]
+    t_sharding = part.shardings(
+        part.filter_spec(P(("pod", "data"), None), tok_shape.shape, mesh),
+        mesh)
+
+    def decode_fn(params, tokens, cache):
+        return model.decode(params, tokens, cache, cfg, pcfg)
+
+    fn = jax.jit(decode_fn,
+                 in_shardings=(p_shardings, t_sharding, c_shardings),
+                 donate_argnums=(2,))
+    return fn, decode_fn, (p_shape, tok_shape, cache_shape)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             pcfg: ParallelConfig) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    mesh_desc = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    chips = len(mesh.devices.flatten())
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            fn, raw_fn, args = build_train_cell(cfg, shape, mesh, pcfg)
+        else:
+            fn, raw_fn, args = build_serve_cell(cfg, shape, mesh, pcfg,
+                                                shape.kind)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        # trip-count-aware global flops/bytes from the jaxpr (see
+        # launch/jaxpr_cost.py: HLO cost analysis counts loop bodies once)
+        jflops, jbytes = jaxpr_cost.traced_cost(raw_fn, *args)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = hlo_walk.collective_bytes(compiled.as_text())
+    roof = rl.Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_desc, chips=chips,
+        flops_per_device=jflops / chips,
+        bytes_per_device=jbytes / chips,
+        collective_bytes_per_device=float(coll["total"]),
+        peak_memory_per_device=float(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)),
+        model_flops=rl.model_flops(cfg, shape),
+        collectives={k: v for k, v in coll.items() if k != "total"})
+    rec = roof.to_dict()
+    rec.update({
+        "status": "ok",
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": {
+            k: int(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")},
+        "cost_flops": float(cost.get("flops", 0.0)),
+        "cost_bytes": float(cost.get("bytes accessed", 0.0)),
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--attn-impl", default="chunked")
+    ap.add_argument("--cross-pod-sync", default="cascaded")
+    ap.add_argument("--seq-shard", dest="seq_shard", default=True,
+                    type=lambda s: s.lower() != "false")
+    ap.add_argument("--logit-chunk", type=int, default=2048)
+    ap.add_argument("--attn-chunk", type=int, default=1024)
+    ap.add_argument("--no-tp", action="store_true")
+    ap.add_argument("--sp-boundary", default="op", choices=("op", "layer"))
+    ap.add_argument("--grad-compression", default="none")
+    args = ap.parse_args()
+
+    pcfg = ParallelConfig(attn_impl=args.attn_impl,
+                          cross_pod_sync=args.cross_pod_sync,
+                          seq_shard_activations=args.seq_shard,
+                          logit_chunk=args.logit_chunk,
+                          attn_chunk=args.attn_chunk,
+                          tensor_parallel=not args.no_tp,
+                          sp_boundary=args.sp_boundary,
+                          grad_compression=args.grad_compression)
+
+    cells = []
+    if args.all:
+        for arch in ALL_ARCHS:
+            cfg = get_config(arch)
+            for shape in applicable_shapes(cfg):
+                cells.append((arch, shape.name))
+            for sname, why in skipped_shapes(cfg):
+                cells.append((arch, f"SKIP:{sname}:{why}"))
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh_multi_pod"]) for r in results
+            if "mesh_multi_pod" in r}
+
+    for arch, shape_name in cells:
+        if shape_name.startswith("SKIP:"):
+            _, sname, why = shape_name.split(":", 2)
+            rec = {"arch": arch, "shape": sname, "status": "skipped",
+                   "reason": why, "mesh_multi_pod": None}
+            if (arch, sname, None) not in done:
+                results.append(rec)
+            print(f"[skip] {arch} x {sname}: {why}")
+            continue
+        for mp in meshes:
+            if (arch, shape_name, mp) in done:
+                print(f"[cached] {arch} x {shape_name} mp={mp}")
+                continue
+            tag = f"{arch} x {shape_name} {'(2,16,16)' if mp else '(16,16)'}"
+            print(f"[run] {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape_name, mp, pcfg)
+                rec["mesh_multi_pod"] = mp
+                print(f"  ok: flops/dev={rec['flops_per_device']:.3e} "
+                      f"bytes/dev={rec['bytes_per_device']:.3e} "
+                      f"coll/dev={rec['collective_bytes_per_device']:.3e} "
+                      f"bottleneck={rec['bottleneck']} "
+                      f"roofline_frac={rec['roofline_fraction']:.3f} "
+                      f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                      flush=True)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name,
+                       "mesh_multi_pod": mp, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"  ERROR {type(e).__name__}: {str(e)[:300]}",
+                      flush=True)
+            results.append(rec)
+            if args.out:
+                json.dump(results, open(args.out, "w"), indent=1)
+    if args.out:
+        json.dump(results, open(args.out, "w"), indent=1)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_err = sum(1 for r in results if r.get("status") == "error")
+    print(f"\n{n_ok} ok, {n_err} errors, "
+          f"{sum(1 for r in results if r.get('status') == 'skipped')} skipped")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

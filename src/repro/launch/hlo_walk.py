@@ -1,0 +1,164 @@
+"""Trip-count-aware collective-traffic accounting from compiled HLO text.
+
+The compiled (post-SPMD, per-device) module prints each while body ONCE, so
+a flat scan of the text undercounts collectives inside scan-over-layers by
+the trip count (e.g. the per-layer FSDP all-gathers).  This walker:
+
+  1. splits the module into named computations,
+  2. builds the call graph (while/call/conditional/fusion/async edges),
+  3. recovers while trip counts from the canonical scan lowering
+     (condition compares the induction var against a constant),
+  4. DFSes from ENTRY accumulating collective wire bytes x multipliers
+     (ring model: all-gather/reduce-scatter/all-to-all (n-1)/n; all-reduce
+     2(n-1)/n; collective-permute 1).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[^\s]+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_CALLED = re.compile(
+    r"(?:to_apply|body|condition|branch_computations|called_computations|"
+    r"calls)=\{?%?([\w\.\-, %]+)\}?")
+_CONST_CMP = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$",
+                     stripped)
+        if ("{" in stripped and not stripped.startswith("ROOT")
+                and ("(" in stripped) and "=" not in stripped.split("(")[0]):
+            name = stripped.split("(")[0].replace("ENTRY", "").strip() \
+                .lstrip("%").strip()
+            if name:
+                cur = name
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+                continue
+            comps[cur].append(stripped)
+    return comps
+
+
+def _line_collective_bytes(line: str) -> float:
+    m = _COLL_RE.search(line)
+    if not m or "-done(" in line or " get-tuple-element(" in line:
+        return 0.0
+    shape_str, op = m.group(1), m.group(2)
+    nbytes = _shape_bytes(shape_str)
+    n = None
+    g = _GROUPS_IOTA_RE.search(line)
+    if g:
+        n = int(g.group(2))
+    else:
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+    factor = 1.0
+    if op == "all-reduce":
+        factor = 2.0 * (n - 1) / n if n and n > 1 else 2.0
+    elif op in ("all-gather", "reduce-scatter", "all-to-all"):
+        factor = (n - 1) / n if n and n > 1 else 1.0
+    return nbytes * factor
+
+
+def _while_trip_count(cond_lines: list[str]) -> int:
+    """Scan lowering: condition is `lt(counter, constant(N))`."""
+    consts = []
+    for line in cond_lines:
+        if "compare(" in line or "lt(" in line:
+            consts += [int(c) for c in _CONST_CMP.findall(line)]
+        else:
+            consts += [int(c) for c in _CONST_CMP.findall(line)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(text: str) -> dict:
+    comps = _split_computations(text)
+    # direct bytes + call edges per computation
+    direct: dict[str, float] = {}
+    edges: dict[str, list[tuple[str, str]]] = {}
+    for name, lines in comps.items():
+        tot = 0.0
+        ed: list[tuple[str, str]] = []
+        for line in lines:
+            tot += _line_collective_bytes(line)
+            if " while(" in line:
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                if bm and cm:
+                    ed.append(("while", bm.group(1) + "|" + cm.group(1)))
+            else:
+                for mm in re.finditer(
+                        r"(?:to_apply|calls)=%?([\w\.\-]+)", line):
+                    ed.append(("call", mm.group(1)))
+                bm = re.search(r"branch_computations=\{([^}]+)\}", line)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        ed.append(("branch", b.strip().lstrip("%")))
+        direct[name] = tot
+        edges[name] = ed
+
+    memo: dict[str, float] = {}
+
+    def total(name: str, depth=0) -> float:
+        if name in memo or depth > 50 or name not in comps:
+            return memo.get(name, 0.0)
+        memo[name] = 0.0  # cycle guard
+        t = direct.get(name, 0.0)
+        for kind, target in edges.get(name, []):
+            if kind == "while":
+                body, cond = target.split("|")
+                trips = _while_trip_count(comps.get(cond, []))
+                t += trips * total(body, depth + 1) + total(cond, depth + 1)
+            else:
+                t += total(target, depth + 1)
+        memo[name] = t
+        return t
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: flat scan
+        return {"total": sum(direct.values()), "entry": None,
+                "n_computations": len(comps)}
+    return {"total": total(entry), "entry": entry,
+            "n_computations": len(comps),
+            "flat": sum(direct.values())}

@@ -1,0 +1,138 @@
+"""Trip-count-aware FLOP/byte accounting from the (pre-SPMD) jaxpr.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE (verified on this
+container: an 8-step lax.scan of a matmul reports 1/8 the FLOPs of the
+unrolled version), so every scan-over-layers model would be undercounted by
+~L x.  This walker recurses through scan (x length), remat/pjit/custom-vjp
+(x 1), cond (max branch) and shard_map (x mesh size: body shapes are
+per-shard) with exact dot_general/conv FLOP formulas and op-level byte
+accounting (operands + outputs — an unfused upper bound, same convention as
+HLO 'bytes accessed').
+
+Global totals: divide by chip count for per-device roofline terms (even-
+split assumption; replicated compute makes this a slight underestimate,
+recorded in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+
+_ELEMWISE_FREE = {
+    "broadcast_in_dim", "reshape", "squeeze", "transpose", "convert_element_type",
+    "slice", "dynamic_slice", "dynamic_update_slice", "concatenate", "pad",
+    "gather", "scatter", "scatter-add", "rev", "iota", "copy", "bitcast",
+    "stop_gradient", "device_put", "select_n", "split",
+}
+
+_SKIP = {"constant", "sharding_constraint", "psum", "ppermute", "all_gather",
+         "all_to_all", "axis_index", "reduce_scatter", "pvary"}
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 0
+
+
+def _bytes(aval) -> int:
+    try:
+        return _size(aval) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> int:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval
+    out = eqn.outvars[0].aval
+    k = 1
+    for d in lc:
+        k *= lhs.shape[d]
+    return 2 * _size(out) * k
+
+
+def _conv_flops(eqn) -> int:
+    rhs = eqn.invars[1].aval          # kernel
+    out = eqn.outvars[0].aval
+    dn = eqn.params["dimension_numbers"]
+    k = _size(rhs) // rhs.shape[dn.rhs_spec[0]]   # per-output-channel taps
+    return 2 * _size(out) * k
+
+
+def jaxpr_cost(jaxpr) -> tuple[float, float]:
+    """Returns (flops, bytes) for a (closed or open) jaxpr."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    flops = 0.0
+    byts = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        io_bytes = (sum(_bytes(v.aval) for v in eqn.invars
+                        if hasattr(v, "aval"))
+                    + sum(_bytes(v.aval) for v in eqn.outvars))
+        if name == "dot_general":
+            flops += _dot_flops(eqn)
+            byts += io_bytes
+        elif name == "conv_general_dilated":
+            flops += _conv_flops(eqn)
+            byts += io_bytes
+        elif name == "scan":
+            f, b = jaxpr_cost(eqn.params["jaxpr"])
+            n = int(eqn.params["length"])
+            flops += n * f
+            byts += n * b
+        elif name == "while":
+            f, b = jaxpr_cost(eqn.params["body_jaxpr"])
+            flops += f            # unknown trip count: count once
+            byts += b
+        elif name == "cond":
+            costs = [jaxpr_cost(br) for br in eqn.params["branches"]]
+            f, b = max(costs)
+            flops += f
+            byts += b
+        elif name == "shard_map":
+            f, b = jaxpr_cost(eqn.params["jaxpr"])
+            mesh = eqn.params.get("mesh")
+            n_dev = 1
+            try:
+                n_dev = int(np.prod(list(dict(mesh.shape).values())))
+            except Exception:
+                pass
+            manual = eqn.params.get("manual_axes") or ()
+            try:
+                sizes = dict(mesh.shape)
+                n_dev = int(np.prod([sizes[a] for a in manual])) or 1
+            except Exception:
+                pass
+            flops += n_dev * f
+            byts += n_dev * b
+        elif "jaxpr" in eqn.params or "call_jaxpr" in eqn.params:
+            inner = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            f, b = jaxpr_cost(inner)
+            flops += f
+            byts += b
+        elif name in ("custom_jvp_call", "custom_vjp_call"):
+            inner = eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")
+            if inner is not None:
+                f, b = jaxpr_cost(inner)
+                flops += f
+                byts += b
+        elif name in _SKIP:
+            continue
+        elif name in _ELEMWISE_FREE:
+            byts += io_bytes
+        else:
+            # generic elementwise / reduction: 1 flop per output element
+            flops += sum(_size(v.aval) for v in eqn.outvars)
+            byts += io_bytes
+    return flops, byts
+
+
+def traced_cost(fn, *args) -> tuple[float, float]:
+    closed = jax.make_jaxpr(fn)(*args)
+    return jaxpr_cost(closed)

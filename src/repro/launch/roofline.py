@@ -1,0 +1,195 @@
+"""Roofline-term extraction from compiled (AOT) artifacts.
+
+Hardware model (TPU v5e, per chip):
+  peak bf16 compute 197 TFLOP/s; HBM bandwidth 819 GB/s; ICI 50 GB/s/link
+  (the assignment's roofline constants — one link in the denominator).
+
+Terms (seconds), per the assignment formulas:
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_bytes / (chips * ICI_BW)
+
+`cost_analysis()` on a post-SPMD executable reports PER-DEVICE flops/bytes,
+so total HLO_FLOPs = flops * chips (the chips cancel; we record both).
+Collective bytes are NOT in cost_analysis: we parse the compiled per-device
+HLO and sum wire traffic per op with the standard ring-model multipliers
+  all-gather        out_bytes * (n-1)/n
+  reduce-scatter    in_bytes  * (n-1)/n
+  all-reduce        2 * bytes * (n-1)/n
+  all-to-all        bytes * (n-1)/n
+  collective-permute bytes
+(n = participants, parsed from replica_groups when available; multipliers
+fall back to 1 when not).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (assignment constant)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective type (ring-model multipliers)."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        shape_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        n = None
+        g = _GROUPS_IOTA_RE.search(line)
+        if g:
+            n = int(g.group(2))
+        else:
+            g = _GROUPS_RE.search(line)
+            if g:
+                n = len(g.group(1).split(","))
+        factor = 1.0
+        if n and n > 1:
+            if op == "all-reduce":
+                factor = 2.0 * (n - 1) / n
+            elif op in ("all-gather", "reduce-scatter", "all-to-all"):
+                factor = (n - 1) / n
+        elif op == "all-reduce":
+            factor = 2.0
+        out[op] += nbytes * factor
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    peak_memory_per_device: float
+    model_flops: float            # 6·N·D train / 2·N·D forward (active N)
+    collectives: dict
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs (remat/redundancy waste catch)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term bound actually doing model math:
+        (MODEL_FLOPS / (chips*PEAK)) / max(term)."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        worst = max(self.t_compute, self.t_memory, self.t_collective)
+        return ideal / worst if worst else float("nan")
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D training; 2·N·D forward (prefill); decode: 2·N per token ·B
+    (+ attention KV readback is memory, not FLOPs)."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(compiled, lowered_text: Optional[str], arch: str, shape,
+            mesh_desc: str, chips: int, cfg) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(getattr(ma, "temp_size_in_bytes", 0)
+                     + getattr(ma, "argument_size_in_bytes", 0)
+                     + getattr(ma, "output_size_in_bytes", 0)
+                     - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = float("nan")
+    text = lowered_text or compiled.as_text()
+    coll = parse_collectives(text)
+    coll_bytes = sum(v for k, v in coll.items() if k != "count")
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_desc, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=coll_bytes,
+        peak_memory_per_device=peak,
+        model_flops=model_flops(cfg, shape),
+        collectives=coll)

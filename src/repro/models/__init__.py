@@ -1,0 +1,78 @@
+"""Model registry: family -> implementation module.
+
+Every family module exposes the same functional API:
+  init(rng, cfg) -> params
+  forward(params, batch, cfg, pcfg) -> (hidden (B,S,d), {aux_loss})
+  init_cache(cfg, batch, max_seq, pcfg) -> cache
+  prefill(params, batch, cache, cfg, pcfg) -> (cache, last_hidden (B,1,d))
+  decode(params, tokens (B,1), cache, cfg, pcfg) -> (cache, logits (B,1,V))
+  cache_specs(cfg, pcfg, long_ctx) -> pytree of PartitionSpec
+plus transformer.logits_fn for the (chunked) LM head.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rwkv6, transformer, whisper, zamba
+from repro.models.transformer import logits_fn  # noqa: F401
+
+_FAMILY = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": transformer,
+    "ssm": rwkv6,
+    "hybrid": zamba,
+    "encdec": whisper,
+}
+
+
+def get_model(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+# ----------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — dry-run) and concrete batches (tests)
+# ----------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, batch: int, seq: int,
+                kind: str = "train") -> dict[str, jax.ShapeDtypeStruct]:
+    """Stand-ins for every model input (weak-type-correct, no allocation).
+
+    kind: train | prefill -> full-length tokens (+labels for train);
+          decode           -> one token per sequence.
+    """
+    sd = jax.ShapeDtypeStruct
+    f = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if kind == "decode":
+        return {"tokens": sd((batch, 1), jnp.int32)}
+    specs: dict[str, Any] = {"tokens": sd((batch, seq), jnp.int32)}
+    if kind == "train":
+        specs["labels"] = sd((batch, seq), jnp.int32)
+    if cfg.family == "vlm":
+        specs["positions"] = sd((3, batch, seq), jnp.int32)
+    if cfg.family == "encdec":
+        specs["enc_embed"] = sd((batch, cfg.enc_seq_len, cfg.d_model), f)
+    return specs
+
+
+def make_batch(rng, cfg: ModelConfig, batch: int, seq: int,
+               kind: str = "train") -> dict[str, jax.Array]:
+    """Concrete random batch matching input_specs (smoke tests)."""
+    out = {}
+    for name, spec in input_specs(cfg, batch, seq, kind).items():
+        key = jax.random.fold_in(rng, abs(hash(name)) % (2**31))
+        if name in ("tokens", "labels"):
+            out[name] = jax.random.randint(key, spec.shape, 0,
+                                           cfg.vocab_size, jnp.int32)
+        elif name == "positions":
+            p = jnp.broadcast_to(jnp.arange(seq)[None], (batch, seq))
+            out[name] = jnp.stack([p, p, p]).astype(jnp.int32)
+        else:
+            out[name] = 0.1 * jax.random.normal(key, spec.shape,
+                                                jnp.float32).astype(spec.dtype)
+    return out

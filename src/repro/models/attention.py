@@ -1,0 +1,266 @@
+"""Attention: RoPE / M-RoPE, GQA, three interchangeable implementations.
+
+Implementations (``ParallelConfig.attn_impl``):
+
+* ``naive``    — full (Sq, Sk) score matrix; oracle for tests.
+* ``chunked``  — blockwise online-softmax in pure jnp.  For causal masks the
+  **diagonal-batched** schedule is used: q/kv are tiled into n blocks and the
+  pairs (i, j<=i) are processed per diagonal offset, so only the lower
+  triangle is ever materialised — exact-FLOP causal attention in XLA without
+  a custom kernel (cuts attention FLOPs ~2x at long context vs. the masked
+  full product; see EXPERIMENTS.md §Perf).
+* ``pallas``   — kernels/flash_attention (TPU target; interpret-mode on CPU).
+
+Layouts: q (B, Sq, Hq, hd); k, v (B, Sk, Hkv, hd); GQA via head grouping.
+All softmax statistics in float32.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------------
+# Rotary embeddings
+# ----------------------------------------------------------------------------
+
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) -> angles (..., S, head_dim//2) float32."""
+    half = head_dim // 2
+    inv_freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x (B, S, H, hd); positions (B, S) int."""
+    ang = _rope_angles(positions, x.shape[-1], theta)      # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    """Qwen2-VL split of the hd/2 frequency bands into (t, h, w) sections —
+    ratio (1/4, 3/8, 3/8): hd=128 -> (16, 24, 24)."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+def apply_mrope(x, positions3, theta: float = 1_000_000.0):
+    """Multimodal RoPE.  positions3 (3, B, S) = (temporal, height, width) ids.
+
+    Frequency bands are partitioned into three sections; each section
+    rotates by its own position stream (paper: Qwen2-VL §2.1)."""
+    head_dim = x.shape[-1]
+    sections = mrope_sections(head_dim)
+    ang_all = _rope_angles(positions3, head_dim, theta)    # (3, B, S, hd/2)
+    parts = []
+    start = 0
+    for i, width in enumerate(sections):
+        parts.append(ang_all[i, :, :, start:start + width])
+        start += width
+    ang = jnp.concatenate(parts, axis=-1)                  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def position_embed(q, k, positions, rope_type: str, theta: float):
+    if rope_type == "rope":
+        return apply_rope(q, positions, theta), apply_rope(k, positions, theta)
+    if rope_type == "mrope":
+        return (apply_mrope(q, positions, theta),
+                apply_mrope(k, positions, theta))
+    if rope_type == "none":
+        return q, k
+    raise ValueError(rope_type)
+
+
+# ----------------------------------------------------------------------------
+# Core attention implementations
+# ----------------------------------------------------------------------------
+
+
+def _group(q, n_kv: int):
+    """(B, S, Hq, hd) -> (B, S, Hkv, G, hd)."""
+    b, s, hq, hd = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, hd)
+
+
+def attend_naive(q, k, v, *, causal: bool, q_offset: int = 0,
+                 kv_len=None):
+    """Oracle. q (B,Sq,Hq,hd), k/v (B,Sk,Hkv,hd). q_offset: absolute position
+    of q[0] (for cached decode). kv_len: optional (B,) valid kv lengths."""
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    qg = _group(q, hkv)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_len is not None:
+        valid = jnp.arange(sk)[None, :] < kv_len[:, None]      # (B, Sk)
+        scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, hd)
+
+
+def _online_update(acc, m, l, scores, vblk):
+    """One online-softmax accumulation step.
+
+    acc (..., q, hd) f32; m, l (..., q); scores (..., q, s) f32;
+    vblk (..., s, hd)."""
+    m_new = jnp.maximum(m, scores.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(scores - m_new[..., None])
+    l_new = l * alpha + p.sum(axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "...qs,...sh->...qh", p, vblk.astype(jnp.float32))
+    return acc_new, m_new, l_new
+
+
+def attend_chunked(q, k, v, *, causal: bool, chunk: int = 1024,
+                   kv_len=None):
+    """Blockwise attention.  Non-causal: scan over kv blocks.  Causal:
+    diagonal-batched lower-triangular schedule (exact FLOPs)."""
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    if causal and sq == sk and sq % chunk == 0 and sq > chunk:
+        return _attend_causal_diag(q, k, v, chunk)
+
+    c = min(chunk, sk)
+    if sk % c != 0:  # fall back to oracle on ragged shapes
+        return attend_naive(q, k, v, causal=causal, kv_len=kv_len)
+    n = sk // c
+    qg = _group(q, hkv).astype(jnp.float32)                # (b,sq,hkv,g,hd)
+    kb = k.reshape(b, n, c, hkv, hd)
+    vb = v.reshape(b, n, c, hkv, hd)
+
+    def body(carry, inputs):
+        acc, m, l = carry
+        (kj, vj, j) = inputs
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, kj,
+                            preferred_element_type=jnp.float32) * scale
+        kpos = j * c + jnp.arange(c)
+        if causal:
+            mask = jnp.arange(sq)[:, None] >= kpos[None, :]
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        if kv_len is not None:
+            valid = kpos[None, :] < kv_len[:, None]        # (b, c)
+            scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+        acc, m, l = _online_update(acc, m, l, scores,
+                                   vj.transpose(0, 2, 1, 3)[:, :, None])
+        return (acc, m, l), None
+
+    acc0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+def _attend_causal_diag(q, k, v, chunk: int):
+    """Diagonal-batched causal attention: process block pairs (i, i-off) for
+    off = 0..n-1; each offset is one batched matmul over n-off block rows.
+    Only the lower triangle of the block grid is computed."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    c = chunk
+    n = s // c
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = _group(q, hkv).reshape(b, n, c, hkv, g, hd).astype(jnp.float32)
+    kb = k.reshape(b, n, c, hkv, hd)
+    vb = v.reshape(b, n, c, hkv, hd)
+
+    acc = jnp.zeros((b, n, hkv, g, c, hd), jnp.float32)
+    m = jnp.full((b, n, hkv, g, c), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, n, hkv, g, c), jnp.float32)
+
+    tri = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]  # within-block
+
+    for off in range(n):
+        rows = n - off                       # q blocks off..n-1 pair kv 0..
+        qi = qb[:, off:]                     # (b, rows, c, hkv, g, hd)
+        kj = kb[:, :rows]
+        vj = vb[:, :rows]
+        scores = jnp.einsum("bnqkgh,bnskh->bnkgqs", qi, kj,
+                            preferred_element_type=jnp.float32) * scale
+        if off == 0:
+            scores = jnp.where(tri[None, None, None, None], scores, NEG_INF)
+        a_new, m_new, l_new = _online_update(
+            acc[:, off:], m[:, off:], l[:, off:], scores,
+            vj.transpose(0, 1, 3, 2, 4)[:, :, :, None])
+        acc = jnp.concatenate([acc[:, :off], a_new], axis=1)
+        m = jnp.concatenate([m[:, :off], m_new], axis=1)
+        l = jnp.concatenate([l[:, :off], l_new], axis=1)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]   # (b,n,hkv,g,c,hd)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, s, hq, hd)
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Public entry points
+# ----------------------------------------------------------------------------
+
+
+def attend(q, k, v, *, causal: bool, impl: str = "chunked",
+           chunk: int = 1024, kv_len=None):
+    if impl == "naive":
+        return attend_naive(q, k, v, causal=causal, kv_len=kv_len)
+    if impl == "chunked":
+        return attend_chunked(q, k, v, causal=causal, chunk=chunk,
+                              kv_len=kv_len)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        if kv_len is None and causal and q.shape[1] == k.shape[1]:
+            return fa_ops.flash_attention(q, k, v, causal=True)
+        return attend_chunked(q, k, v, causal=causal, chunk=chunk,
+                              kv_len=kv_len)
+    raise ValueError(f"unknown attn impl {impl!r}")
+
+
+def decode_attend(q, k_cache, v_cache, cache_len):
+    """Single-token decode attention over a (possibly sharded) KV cache.
+
+    q (B, 1, Hq, hd); caches (B, Smax, Hkv, hd); cache_len (B,) valid length
+    (the new token's kv must already be written at cache_len-1).
+    Reductions over Smax lower to psums when the cache is sequence-sharded.
+    """
+    b, _, hq, hd = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    qg = _group(q, hkv)[:, 0]                              # (B, Hkv, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    valid = jnp.arange(smax)[None, :] < cache_len[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, hq, hd)

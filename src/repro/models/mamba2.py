@@ -1,0 +1,134 @@
+"""Mamba2 (SSD) core ops: causal depthwise conv + chunked selective scan.
+
+Recurrence per head h (P = head_dim, N = state_dim):
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t x_t ⊗ B_t        (A < 0 scalar per head)
+    y_t = h_t C_t + D x_t
+
+B_t, C_t are shared across the heads of a group (n_groups).  The chunked
+(SSD) evaluation computes intra-chunk contributions with a (c, c) per-head
+decay matrix (all exponents <= 0) and carries the (P, N) state across chunks
+— mathematically identical to the sequential scan (tests assert allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv.  x (B,S,ch); w (width,ch);
+    conv_state (B,width-1,ch) carries the last inputs.  Returns (y, state)."""
+    b, s, ch = x.shape
+    width = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((b, width - 1, ch), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + s] * w[i][None, None] for i in range(width))
+    return jax.nn.silu(y), xp[:, -(width - 1):]
+
+
+def _expand_groups(m, heads: int):
+    """(B,S,G,N) -> (B,S,H,N) by repeating each group over its heads."""
+    b, s, g, n = m.shape
+    return jnp.repeat(m, heads // g, axis=2)
+
+
+def ssd_sequential(x, dt, la, Bm, Cm, state):
+    """x (B,S,H,P); dt/la (B,S,H); Bm/Cm (B,S,H,N); state (B,H,P,N)."""
+    def step(h, inp):
+        x_t, dt_t, la_t, b_t, c_t = inp
+        h = (h * jnp.exp(la_t)[..., None, None]
+             + jnp.einsum("bhp,bhn->bhpn", x_t * dt_t[..., None], b_t))
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    xs = jax.tree.map(lambda a: a.swapaxes(0, 1), (x, dt, la, Bm, Cm))
+    state, ys = jax.lax.scan(step, state, xs)
+    return state, ys.swapaxes(0, 1)
+
+
+def ssd_chunked(x, dt, la, Bm, Cm, state, chunk: int = 128):
+    """Chunked SSD; exact (up to fp) match with ssd_sequential."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    c = min(chunk, s)
+    if s % c != 0:
+        return ssd_sequential(x, dt, la, Bm, Cm, state)
+    nc = s // c
+    r4 = lambda a: a.reshape(b, nc, c, *a.shape[2:]).swapaxes(0, 1)
+    xb, dtb, lab, bb, cb = r4(x), r4(dt), r4(la), r4(Bm), r4(Cm)
+
+    def body(st, inp):
+        xc, dtc, lac, bc, cc = (a.astype(jnp.float32) for a in inp)
+        scum = jnp.cumsum(lac, axis=1)                 # (B,c,H) inclusive
+        # intra: decay(i,j) = exp(s_i - s_j), j <= i
+        diff = scum[:, :, None] - scum[:, None, :]     # (B,ci,cj,H)
+        mask = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]
+        dec = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        cbm = jnp.einsum("bihn,bjhn->bijh", cc, bc)    # (B,ci,cj,H)
+        m = cbm * dec * dtc[:, None]                   # dt_j on axis cj
+        y = jnp.einsum("bijh,bjhp->bihp", m, xc)
+        # inter: exp(s_i) C_i · h_prev
+        y = y + (jnp.einsum("bihn,bhpn->bihp", cc, st)
+                 * jnp.exp(scum)[..., None])
+        # state update
+        s_last = scum[:, -1]                           # (B,H)
+        w = dtc * jnp.exp(s_last[:, None] - scum)      # (B,c,H)
+        st_new = (st * jnp.exp(s_last)[..., None, None]
+                  + jnp.einsum("bjhp,bjhn->bhpn", xc * w[..., None], bc))
+        return st_new, y
+
+    state, ys = jax.lax.scan(body, state.astype(jnp.float32),
+                             (xb, dtb, lab, bb, cb))
+    ys = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    return state, ys.astype(x.dtype)
+
+
+def mamba_block(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
+                chunked: bool = True):
+    """One mamba2 mixer.  x (B,S,d) -> (out, new_conv_state, new_ssm_state).
+
+    p: w_in (d, 2*d_in + 2*G*N + H), conv (w, d_in+2GN), A_log/D/dt_bias (H,),
+    norm (d_in,), w_out (d_in, d).
+    """
+    b, s, d = x.shape
+    ssm = cfg.ssm
+    h_heads, n, g = ssm.n_ssm_heads, ssm.state_dim, ssm.n_groups
+    d_in = 2 * d
+    p_head = d_in // h_heads
+
+    proj = jnp.einsum("bsd,de->bse", x, cm.cast(p["w_in"], cfg))
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + d_in + 2 * g * n]
+    dt_raw = proj[..., -h_heads:]
+
+    xbc, conv_state = causal_conv(xbc, cm.cast(p["conv"], cfg), conv_state)
+    x_in = xbc[..., :d_in].reshape(b, s, h_heads, p_head)
+    bm = xbc[..., d_in:d_in + g * n].reshape(b, s, g, n)
+    cmx = xbc[..., d_in + g * n:].reshape(b, s, g, n)
+    bm = _expand_groups(bm, h_heads)
+    cmx = _expand_groups(cmx, h_heads)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))       # (H,) < 0
+    la = dt * a                                        # log decay <= 0
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((b, h_heads, p_head, n), jnp.float32)
+    ssd = ssd_chunked if chunked else ssd_sequential
+    ssm_state, y = ssd(x_in.astype(jnp.float32), dt, la,
+                       bm.astype(jnp.float32), cmx.astype(jnp.float32),
+                       ssm_state)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] \
+        * x_in.astype(jnp.float32)
+    y = y.reshape(b, s, d_in)
+    y = cm.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"],
+                    cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype),
+                     cm.cast(p["w_out"], cfg))
+    return out, conv_state, ssm_state

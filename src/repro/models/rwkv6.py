@@ -1,0 +1,274 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent per-channel decay.
+
+Time-mix recurrence per head (k/v dims = head_dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (w_t = exp(-exp(lora(x_t))))
+    y_t = r_t · (S_{t-1} + diag(u ⊙ k_t) 1 v_t^T)  ==  r·S + (r·(u⊙k)) v
+
+Two implementations:
+* sequential lax.scan over time — oracle + decode path (O(1) state);
+* chunked — cumulative-log-decay blocks; the intra-chunk term materialises
+  the per-channel decay tensor exp(t_i - s_j) (all exponents <= 0, so no
+  overflow), matching kernels/wkv6 which computes the same per (B,H) tile in
+  VMEM.
+
+Simplifications vs. the reference (recorded in DESIGN.md): static token-shift
+interpolation weights (RWKV5-style mu) instead of the dynamic data-dependent
+mix lora; decay lora has no w0 bias; ln_x is per-head RMS with scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, _param_shapes
+from repro.models import common as cm
+
+DP = ("pod", "data")
+XLA_CHUNK = 32  # intra-chunk tensor is (B, c, c, H, hd) — keep c modest
+
+
+def init(rng, cfg: ModelConfig):
+    return cm.init_from_shapes(rng, _param_shapes(cfg))
+
+
+# ----------------------------------------------------------------------------
+# WKV6 core
+# ----------------------------------------------------------------------------
+
+
+def wkv_sequential(r, k, v, logw, u, state):
+    """r/k/v/logw (B,S,H,hd); u (H,hd); state (B,H,hd,hd) [k-dim, v-dim]."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = (jnp.einsum("bhk,bhkv->bhv", r_t, s)
+             + jnp.einsum("bhk,bhk->bh", r_t, u[None] * k_t)[..., None] * v_t)
+        s_new = s * jnp.exp(w_t)[..., None] + kv
+        return s_new, y
+
+    xs = jax.tree.map(lambda a: a.swapaxes(0, 1), (r, k, v, logw))
+    state, ys = jax.lax.scan(step, state, xs)
+    return state, ys.swapaxes(0, 1)                    # (B,S,H,hd)
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = XLA_CHUNK):
+    """Chunked evaluation; exact (up to fp) match with wkv_sequential."""
+    b, s, h, hd = r.shape
+    c = min(chunk, s)
+    if s % c != 0:
+        return wkv_sequential(r, k, v, logw, u, state)
+    n = s // c
+    resh = lambda a: a.reshape(b, n, c, h, hd).swapaxes(0, 1)
+    rb, kb, vb, wb = resh(r), resh(k), resh(v), resh(logw)
+
+    def chunk_body(st, inp):
+        rc, kc, vc, wc = (a.astype(jnp.float32) for a in inp)  # (B,c,H,hd)
+        scum = jnp.cumsum(wc, axis=1)                  # inclusive (B,c,H,hd)
+        texc = scum - wc                               # exclusive
+        # intra-chunk: D[i,j] = t_i - s_j  (<= 0 for j < i)
+        diff = texc[:, :, None] - scum[:, None, :]     # (B,ci,cj,H,hd)
+        mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+        dec = jnp.where(mask[None, :, :, None, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bihd,bijhd,bjhd->bhij", rc, dec, kc)
+        y = jnp.einsum("bhij,bjhd->bihd", scores, vc)
+        # diagonal bonus term
+        dsc = jnp.einsum("bihd,hd,bihd->bhi", rc, u.astype(jnp.float32), kc)
+        y = y + dsc.transpose(0, 2, 1)[..., None] * vc
+        # inter-chunk: r_i decayed from chunk start times prior state
+        rt = rc * jnp.exp(texc)
+        y = y + jnp.einsum("bihk,bhkv->bihv", rt, st)
+        # state update
+        s_last = scum[:, -1]                           # (B,H,hd)
+        kd = kc * jnp.exp(s_last[:, None] - scum)
+        st_new = (st * jnp.exp(s_last)[..., None]
+                  + jnp.einsum("bjhk,bjhv->bhkv", kd, vc))
+        return st_new, y
+
+    state, ys = jax.lax.scan(chunk_body, state.astype(jnp.float32),
+                             (rb, kb, vb, wb))
+    ys = ys.swapaxes(0, 1).reshape(b, s, h, hd)
+    return state, ys.astype(r.dtype)
+
+
+# ----------------------------------------------------------------------------
+# blocks
+# ----------------------------------------------------------------------------
+
+
+def _shift(x, x_prev):
+    """xs[t] = x[t-1]; x_prev (B,d) fills t=0."""
+    return jnp.concatenate([x_prev[:, None].astype(x.dtype), x[:, :-1]],
+                           axis=1)
+
+
+def time_mix(p, x, x_prev, cfg: ModelConfig, pcfg: ParallelConfig,
+             state, *, sequential: bool, fresh: bool = False):
+    b, s, d = x.shape
+    h = cfg.ssm.n_ssm_heads
+    hd = d // h
+    xs = _shift(x, x_prev)
+    mu = cm.cast(p["mu"], cfg)                         # (5, d)
+    mixed = [x + mu[i] * (xs - x) for i in range(5)]
+    xr, xk, xv, xw, xg = mixed
+    r = jnp.einsum("bsd,de->bse", xr, cm.cast(p["w_r"], cfg))
+    k = jnp.einsum("bsd,de->bse", xk, cm.cast(p["w_k"], cfg))
+    v = jnp.einsum("bsd,de->bse", xv, cm.cast(p["w_v"], cfg))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, cm.cast(p["w_g"], cfg)))
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, cm.cast(p["w_decay"], cfg)))
+    dec = jnp.einsum("bsr,rd->bsd", lora, cm.cast(p["w_decay2"], cfg))
+    logw = -jnp.exp(dec.astype(jnp.float32) - 2.0)     # w in (0,1); slow init
+
+    hdv = lambda a: a.reshape(b, s, h, hd)
+    r4, k4, v4, w4 = hdv(r), hdv(k), hdv(v), hdv(logw)
+    r4 = cm.shard(r4, P(DP, None, "model", None))
+    u = p["bonus"]                                     # (H, hd)
+    if sequential:
+        state, y = wkv_sequential(r4.astype(jnp.float32),
+                                  k4.astype(jnp.float32),
+                                  v4.astype(jnp.float32), w4, u, state)
+    elif (pcfg.attn_impl == "pallas" and fresh
+          and s % min(cfg.ssm.chunk, 64) == 0):
+        # Pallas WKV6 kernel (zero initial state = fresh sequence)
+        from repro.kernels.wkv6 import ops as wkv_ops
+        tr = lambda a: a.swapaxes(1, 2)                # (B,S,H,hd)->(B,H,S,hd)
+        y = tr(wkv_ops.wkv6(tr(r4), tr(k4), tr(v4), tr(w4), u,
+                            min(cfg.ssm.chunk, 64)))
+        state = state  # not needed on the train path
+    else:
+        state, y = wkv_chunked(r4, k4, v4, w4, u, state,
+                               chunk=min(cfg.ssm.chunk, XLA_CHUNK))
+    # per-head norm (ln_x), flatten, gate, project out
+    yn = cm.rms_norm(y.astype(jnp.float32),
+                     p["ln_x"].reshape(h, hd), cfg.norm_eps)
+    out = (yn.reshape(b, s, d).astype(x.dtype)) * g
+    out = jnp.einsum("bsd,de->bse", out, cm.cast(p["w_o"], cfg))
+    return out, x[:, -1].astype(jnp.float32), state
+
+
+def channel_mix(p, x, x_prev, cfg: ModelConfig):
+    xs = _shift(x, x_prev)
+    mu = cm.cast(p["mu"], cfg)                         # (2, d)
+    xk = x + mu[0] * (xs - x)
+    xr = x + mu[1] * (xs - x)
+    k = jnp.einsum("bsd,df->bsf", xk, cm.cast(p["w_k"], cfg))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, cm.cast(p["w_v"], cfg))
+    r = jnp.einsum("bsd,de->bse", xr, cm.cast(p["w_r"], cfg))
+    return jax.nn.sigmoid(r) * kv, x[:, -1].astype(jnp.float32)
+
+
+def _residual_spec(pcfg):
+    """Residual stream sequence-sharded over 'model' (rwkv has no TP heads
+    to fill the model axis; SP keeps remat-saved activations 1/16 size)."""
+    return P(DP, "model" if pcfg.seq_shard_activations else None, None)
+
+
+def _layer(pl, x, cfg, pcfg, st, *, sequential: bool, fresh: bool = False):
+    """st = (wkv_state, tmix_x, cmix_x)."""
+    wkv_state, tx, cx = st
+    h = cm.rms_norm(x, pl["norm1"], cfg.norm_eps)
+    a, tx_new, wkv_state = time_mix(pl["tmix"], h, tx, cfg, pcfg, wkv_state,
+                                    sequential=sequential, fresh=fresh)
+    x = cm.shard(x + a, _residual_spec(pcfg))
+    h = cm.rms_norm(x, pl["norm2"], cfg.norm_eps)
+    m, cx_new = channel_mix(pl["cmix"], h, cx, cfg)
+    x = cm.shard(x + m, _residual_spec(pcfg))
+    return x, (wkv_state, tx_new, cx_new)
+
+
+# ----------------------------------------------------------------------------
+# model API
+# ----------------------------------------------------------------------------
+
+
+def _zero_state(cfg, b):
+    h = cfg.ssm.n_ssm_heads
+    hd = cfg.d_model // h
+    # batch-sharded only: sharding the k-dim over 'model' inserts a psum per
+    # chunk per layer (+330 GB/step measured — refuted iteration, §Perf)
+    wkv = cm.shard(jnp.zeros((cfg.n_layers, b, h, hd, hd), jnp.float32),
+                   P(None, DP, None, None, None))
+    tx = cm.shard(jnp.zeros((cfg.n_layers, b, cfg.d_model), jnp.float32),
+                  P(None, DP, None))
+    cx = cm.shard(jnp.zeros((cfg.n_layers, b, cfg.d_model), jnp.float32),
+                  P(None, DP, None))
+    return (wkv, tx, cx)
+
+
+def forward(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = cm.embed_lookup(params["embed"]["tokens"], tokens, cfg)
+    x = cm.shard(x, _residual_spec(pcfg))
+    states = _zero_state(cfg, b)
+
+    def layer(x, xs):
+        pl, st = xs
+        out, _ = _layer(pl, x, cfg, pcfg, st, sequential=False, fresh=True)
+        return out, None
+
+    body = layer
+    if pcfg.remat == "full":
+        body = jax.checkpoint(layer,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, (params["layers"], states))
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return x, {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               pcfg: ParallelConfig, dtype=jnp.bfloat16):
+    wkv, tx, cx = _zero_state(cfg, batch)
+    return {"wkv": wkv, "tmix_x": tx, "cmix_x": cx,
+            "pos": jnp.zeros((), jnp.int32),
+            "lengths": jnp.zeros((batch,), jnp.int32)}
+
+
+def cache_specs(cfg, pcfg, long_ctx: bool, model_size: int = 16):
+    h = cfg.ssm.n_ssm_heads
+    wkv = (P(None, DP, "model", None, None) if h % model_size == 0
+           else P(None, DP, None, "model", None))   # shard k-dim instead
+    return {"wkv": wkv,
+            "tmix_x": P(None, DP, None), "cmix_x": P(None, DP, None),
+            "pos": P(), "lengths": P(DP)}
+
+
+def _run_cached(params, x, cfg, pcfg, cache, *, sequential):
+    states = (cache["wkv"], cache["tmix_x"], cache["cmix_x"])
+
+    def layer(x, xs):
+        pl, st = xs
+        out, st_new = _layer(pl, x, cfg, pcfg, st, sequential=sequential)
+        return out, st_new
+
+    body = layer
+    if pcfg.remat == "full" and x.shape[1] > 1:
+        body = jax.checkpoint(layer,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, (wkv, tx, cx) = jax.lax.scan(body, x, (params["layers"], states))
+    return x, wkv, tx, cx
+
+
+def prefill(params, batch, cache, cfg: ModelConfig, pcfg: ParallelConfig):
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = cm.embed_lookup(params["embed"]["tokens"], tokens, cfg)
+    x = cm.shard(x, P(DP, None, None))
+    x, wkv, tx, cx = _run_cached(params, x, cfg, pcfg, cache, sequential=False)
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    new_cache = {"wkv": wkv, "tmix_x": tx, "cmix_x": cx,
+                 "pos": cache["pos"] + s, "lengths": cache["lengths"] + s}
+    return new_cache, x[:, -1:]
+
+
+def decode(params, tokens, cache, cfg: ModelConfig, pcfg: ParallelConfig):
+    x = cm.embed_lookup(params["embed"]["tokens"], tokens, cfg)
+    x, wkv, tx, cx = _run_cached(params, x, cfg, pcfg, cache, sequential=True)
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    from repro.models.transformer import logits_fn
+    logits = logits_fn(params, x, cfg)
+    new_cache = {"wkv": wkv, "tmix_x": tx, "cmix_x": cx,
+                 "pos": cache["pos"] + 1, "lengths": cache["lengths"] + 1}
+    return new_cache, logits

@@ -1,0 +1,294 @@
+"""Decoder-only transformer: dense, VLM (M-RoPE) and MoE families.
+
+One scan-over-layers implementation serves train forward, prefill and
+single-token decode; layer weights are stacked on a leading L dim and the
+per-layer KV cache travels through the scan as xs/ys.  Remat (full recompute)
+wraps the layer body for train/prefill.
+
+Activation sharding (see DESIGN.md §5): residual stream is
+P(('pod','data'), 'model', None) when sequence-parallel activations are on —
+GSPMD inserts the SP all-gather at QKV and reduce-scatter after wo/w_down.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, _param_shapes
+from repro.models import attention as att
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+
+DP = ("pod", "data")
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+
+def init(rng, cfg: ModelConfig):
+    return cm.init_from_shapes(rng, _param_shapes(cfg))
+
+
+# ----------------------------------------------------------------------------
+# building blocks (shared with whisper / zamba)
+# ----------------------------------------------------------------------------
+
+
+def residual_spec(pcfg: ParallelConfig) -> P:
+    return P(DP, "model" if pcfg.seq_shard_activations else None, None)
+
+
+def attention_block(p, x, positions, cfg: ModelConfig, pcfg: ParallelConfig,
+                    *, causal: bool = True, cache: Optional[tuple] = None,
+                    kv_override: Optional[tuple] = None):
+    """Pre-norm attention with optional KV cache.
+
+    p: dict with wq, wk, wv, wo (+ q_norm/k_norm) — no leading layer dim.
+    cache: (k_cache, v_cache, pos, lengths) -> returns updated (k, v).
+    kv_override: (k, v) already projected/rotated (whisper cross-attn).
+    Returns (attn_out, new_cache_kv | None).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, cm.cast(p["wq"], cfg))
+    q = q.reshape(b, s, cfg.n_heads, hd)
+
+    if kv_override is None:
+        k = jnp.einsum("bsd,dq->bsq", x, cm.cast(p["wk"], cfg))
+        v = jnp.einsum("bsd,dq->bsq", x, cm.cast(p["wv"], cfg))
+        k = k.reshape(b, s, cfg.n_kv_heads, hd)
+        v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    else:
+        k, v = kv_override
+
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if kv_override is None:
+            k = cm.rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if kv_override is None:
+        qr, kr = att.position_embed(q, k, positions, cfg.rope_type,
+                                    cfg.rope_theta)
+    else:
+        qr, kr = q, k
+
+    qr = cm.shard(qr, P(DP, None, "model", None))
+    kr = cm.shard(kr, P(DP, None, "model", None))
+    # v must be pinned too: leaving it to propagation lets the seq-sharded
+    # KV-cache layout flow into the diagonal-block attention slices, which
+    # trips an XLA SPMD verifier bug at 32k prefill (see EXPERIMENTS.md).
+    v = cm.shard(v, P(DP, None, "model", None))
+
+    new_kv = None
+    if cache is not None:
+        k_cache, v_cache, pos, lengths = cache
+        k_cache = jax.lax.dynamic_update_slice(k_cache, kr.astype(k_cache.dtype),
+                                               (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                               (0, pos, 0, 0))
+        new_kv = (k_cache, v_cache)
+        if s == 1:  # decode
+            if pcfg.attn_impl == "pallas":
+                from repro.kernels.decode_attention import ops as dec_ops
+                out = dec_ops.decode_attention(qr, k_cache, v_cache, lengths)
+            else:
+                out = att.decode_attend(qr, k_cache, v_cache, lengths)
+        else:       # prefill: attend within the freshly written prefix
+            out = att.attend(qr, kr, v, causal=causal, impl=pcfg.attn_impl,
+                             chunk=pcfg.attn_chunk)
+    else:
+        out = att.attend(qr, kr, v, causal=causal, impl=pcfg.attn_impl,
+                         chunk=pcfg.attn_chunk)
+
+    out = cm.shard(out, P(DP, None, "model", None))
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    proj = jnp.einsum("bsq,qd->bsd", out, cm.cast(p["wo"], cfg))
+    return proj, new_kv
+
+
+def mlp_block(p, x, cfg: ModelConfig, pcfg: ParallelConfig):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, cm.cast(p["w_gate"], cfg)))
+    u = jnp.einsum("bsd,df->bsf", x, cm.cast(p["w_up"], cfg))
+    h = cm.shard(h * u, P(DP, None, "model"))
+    return jnp.einsum("bsf,fd->bsd", h, cm.cast(p["w_down"], cfg))
+
+
+def _dense_layer(pl, x, positions, cfg, pcfg, cache=None):
+    # sp_boundary='layer': one explicit bf16 seq-unshard at layer entry and
+    # one reduce-scatter at exit, instead of letting GSPMD place the SP
+    # reshards (it picks f32 points inside the norms — 2x wire bytes and
+    # all-reduce instead of RS on some boundaries; see EXPERIMENTS.md §Perf).
+    layer_sp = (pcfg.seq_shard_activations and pcfg.sp_boundary == "layer")
+    if layer_sp:
+        x = cm.shard(x, P(DP, None, None))
+    h = cm.rms_norm(x, pl["norm_attn"], cfg.norm_eps)
+    a, new_kv = attention_block(pl["attn"], h, positions, cfg, pcfg,
+                                cache=cache)
+    x = x + a if layer_sp else cm.shard(x + a, residual_spec(pcfg))
+    h = cm.rms_norm(x, pl["norm_mlp"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m, aux = moe_mod.moe_ffn(h, pl["moe"], cfg, pcfg)
+    else:
+        m, aux = mlp_block(pl["mlp"], h, cfg, pcfg), jnp.zeros((), jnp.float32)
+    x = cm.shard(x + m, residual_spec(pcfg))
+    return x, new_kv, aux
+
+
+# ----------------------------------------------------------------------------
+# embedding / head
+# ----------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens, cfg):
+    return cm.embed_lookup(params["embed"]["tokens"], tokens, cfg)
+
+
+def logits_fn(params, hidden, cfg):
+    """hidden (B, C, d) -> logits (B, C, V) float32 (call per chunk).
+
+    The head weight is explicitly gathered to P(None, 'model') first: its
+    stored layout is FSDP-sharded on d, and letting propagation resolve the
+    contraction psums FULL (B,C,V) logits over 'data' — ~100 GB/step of
+    all-reduce at 150k vocab.  Gathering the (d, V/16) weight instead costs
+    MBs and is loop-invariant across loss chunks (hoisted by XLA)."""
+    if cfg.tie_embeddings:
+        w = cm.cast(params["embed"]["tokens"], cfg).T
+    else:
+        w = cm.cast(params["head"]["w"], cfg)
+    w = cm.shard(w, P(None, "model"))
+    logits = jnp.einsum("bsd,dv->bsv", hidden, w,
+                        preferred_element_type=jnp.float32)
+    return cm.shard(logits, P(DP, None, "model"))
+
+
+# ----------------------------------------------------------------------------
+# forward (train / eval): tokens -> hidden states
+# ----------------------------------------------------------------------------
+
+
+def _positions_from_batch(batch, cfg):
+    tokens = batch["tokens"]
+    b, s = tokens.shape[:2]
+    if cfg.rope_type == "mrope":
+        if "positions" in batch:
+            return batch["positions"]                       # (3, B, S)
+        p = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        return jnp.stack([p, p, p])
+    if "positions" in batch:
+        return batch["positions"]                           # (B, S)
+    return jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+
+def forward(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
+    tokens = batch["tokens"]
+    positions = _positions_from_batch(batch, cfg)
+    x = embed_tokens(params, tokens, cfg)
+    x = cm.shard(x, residual_spec(pcfg))
+
+    def layer(carry, pl):
+        x, aux = carry
+        out, _, aux_l = _dense_layer(pl, x, positions, cfg, pcfg)
+        return (out, aux + aux_l), None
+
+    body = layer
+    if pcfg.remat == "full":
+        body = jax.checkpoint(layer,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return x, {"aux_loss": aux}
+
+
+# ----------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ----------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               pcfg: ParallelConfig, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, pcfg: ParallelConfig, long_ctx: bool,
+                model_size: int = 16):
+    """Sharding for the (L, B, S, Hkv, hd) KV cache.
+
+    Preference order: kv heads over 'model' when divisible; otherwise the
+    SEQUENCE dim over 'model' (flash-decode: the softmax reductions over the
+    sharded S lower to cheap psums in decode_attend).  Long-context decode
+    (B=1): sequence over BOTH ('data','model') — the only way 500k x d KV
+    fits per device, and the data axis is otherwise idle at batch 1."""
+    if long_ctx:
+        kv = P(None, DP, ("data", "model"), None, None)
+    elif cfg.n_kv_heads % model_size == 0:
+        kv = P(None, DP, None, "model", None)
+    else:
+        kv = P(None, DP, "model", None, None)
+    return {"k": kv, "v": kv, "pos": P(), "lengths": P(DP)}
+
+
+def _run_layers_cached(params, x, positions, cfg, pcfg, cache, lengths, pos):
+    def layer(carry, xs):
+        x, aux = carry
+        pl, kc, vc = xs
+        out, new_kv, aux_l = _dense_layer(
+            pl, x, positions, cfg, pcfg, cache=(kc, vc, pos, lengths))
+        return (out, aux + aux_l), new_kv
+
+    body = layer
+    if pcfg.remat == "full" and x.shape[1] > 1:
+        body = jax.checkpoint(layer,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), (k_new, v_new) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], cache["k"], cache["v"]))
+    return x, k_new, v_new
+
+
+def prefill(params, batch, cache, cfg: ModelConfig, pcfg: ParallelConfig):
+    """Writes the prompt KV into the cache; returns (cache, last_hidden)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = _positions_from_batch(batch, cfg)
+    x = embed_tokens(params, tokens, cfg)
+    x = cm.shard(x, residual_spec(pcfg))
+    lengths = cache["lengths"] + s
+    x, k_new, v_new = _run_layers_cached(
+        params, x, positions, cfg, pcfg, cache, lengths, cache["pos"])
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    new_cache = {"k": k_new, "v": v_new, "pos": cache["pos"] + s,
+                 "lengths": lengths}
+    return new_cache, x[:, -1:]
+
+
+def decode(params, tokens, cache, cfg: ModelConfig, pcfg: ParallelConfig):
+    """One token step.  tokens (B, 1) -> (cache', logits (B, 1, V))."""
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    if cfg.rope_type == "mrope":
+        p = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+        positions = jnp.stack([p, p, p])
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    x = embed_tokens(params, tokens, cfg)
+    lengths = cache["lengths"] + 1
+    x, k_new, v_new = _run_layers_cached(
+        params, x, positions, cfg, pcfg, cache, lengths, pos)
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = logits_fn(params, x, cfg)
+    new_cache = {"k": k_new, "v": v_new, "pos": pos + 1, "lengths": lengths}
+    return new_cache, logits

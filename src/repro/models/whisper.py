@@ -1,0 +1,194 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Per the assignment, the audio conv frontend is a STUB: the batch carries
+precomputed frame embeddings ``enc_embed (B, enc_seq_len, d)``.  Positions
+are sinusoidal (non-learned).  LayerNorm (scale-only) per whisper.
+
+Decode path: self-attn KV cache + cross-attn KV computed once at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, _param_shapes
+from repro.models import common as cm
+from repro.models.transformer import (attention_block, mlp_block, logits_fn,
+                                      residual_spec)
+
+DP = ("pod", "data")
+
+
+def init(rng, cfg: ModelConfig):
+    return cm.init_from_shapes(rng, _param_shapes(cfg))
+
+
+# ----------------------------------------------------------------------------
+# encoder
+# ----------------------------------------------------------------------------
+
+
+def encode(params, enc_embed, cfg: ModelConfig, pcfg: ParallelConfig):
+    b, f, d = enc_embed.shape
+    x = enc_embed + cm.sinusoidal_positions(f, d)[None].astype(enc_embed.dtype)
+    x = cm.shard(x, residual_spec(pcfg))
+    dummy_pos = jnp.zeros((b, f), jnp.int32)
+
+    def layer(x, pl):
+        h = cm.layer_norm(x, pl["norm_attn"], cfg.norm_eps)
+        a, _ = attention_block(pl["attn"], h, dummy_pos, cfg, pcfg,
+                               causal=False)
+        x = cm.shard(x + a, residual_spec(pcfg))
+        h = cm.layer_norm(x, pl["norm_mlp"], cfg.norm_eps)
+        x = cm.shard(x + mlp_block(pl["mlp"], h, cfg, pcfg),
+                     residual_spec(pcfg))
+        return x, None
+
+    body = jax.checkpoint(layer,
+                          policy=jax.checkpoint_policies.nothing_saveable) \
+        if pcfg.remat == "full" else layer
+    enc_layers = {k: v for k, v in params["enc"].items()
+                  if k != "final_norm"}
+    x, _ = jax.lax.scan(body, x, enc_layers)
+    return cm.layer_norm(x, params["enc"]["final_norm"], cfg.norm_eps)
+
+
+# ----------------------------------------------------------------------------
+# decoder
+# ----------------------------------------------------------------------------
+
+
+def _project_cross_kv(pl_cross, enc_out, cfg):
+    b, f, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("bfd,dq->bfq", enc_out, cm.cast(pl_cross["wk"], cfg))
+    v = jnp.einsum("bfd,dq->bfq", enc_out, cm.cast(pl_cross["wv"], cfg))
+    return (k.reshape(b, f, cfg.n_kv_heads, hd),
+            v.reshape(b, f, cfg.n_kv_heads, hd))
+
+
+def _dec_layer(pl, x, positions, cfg, pcfg, enc_out=None, cross_kv=None,
+               cache=None):
+    """cache: None | (k_self, v_self, pos, lengths)."""
+    h = cm.layer_norm(x, pl["norm_self"], cfg.norm_eps)
+    a, new_kv = attention_block(pl["self_attn"], h, positions, cfg, pcfg,
+                                causal=True, cache=cache)
+    x = cm.shard(x + a, residual_spec(pcfg))
+
+    h = cm.layer_norm(x, pl["norm_cross"], cfg.norm_eps)
+    if cross_kv is None:
+        cross_kv = _project_cross_kv(pl["cross_attn"], enc_out, cfg)
+    a, _ = attention_block(pl["cross_attn"], h, positions, cfg, pcfg,
+                           causal=False, kv_override=cross_kv)
+    x = cm.shard(x + a, residual_spec(pcfg))
+
+    h = cm.layer_norm(x, pl["norm_mlp"], cfg.norm_eps)
+    x = cm.shard(x + mlp_block(pl["mlp"], h, cfg, pcfg), residual_spec(pcfg))
+    return x, new_kv
+
+
+def _embed_dec(params, tokens, cfg, offset=0):
+    x = cm.embed_lookup(params["embed"]["tokens"], tokens, cfg)
+    s = tokens.shape[1]
+    pos = cm.sinusoidal_positions(s, cfg.d_model, offset=offset)
+    return x + pos[None].astype(x.dtype)
+
+
+def forward(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
+    enc_out = encode(params, batch["enc_embed"], cfg, pcfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _embed_dec(params, tokens, cfg)
+    x = cm.shard(x, residual_spec(pcfg))
+
+    def layer(x, pl):
+        out, _ = _dec_layer(pl, x, positions, cfg, pcfg, enc_out=enc_out)
+        return out, None
+
+    body = jax.checkpoint(layer,
+                          policy=jax.checkpoint_policies.nothing_saveable) \
+        if pcfg.remat == "full" else layer
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return x, {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+# ----------------------------------------------------------------------------
+# serving
+# ----------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               pcfg: ParallelConfig, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    self_shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd)
+    cross_shape = (cfg.n_layers, batch, cfg.enc_seq_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(self_shape, dtype),
+            "v": jnp.zeros(self_shape, dtype),
+            "cross_k": jnp.zeros(cross_shape, dtype),
+            "cross_v": jnp.zeros(cross_shape, dtype),
+            "pos": jnp.zeros((), jnp.int32),
+            "lengths": jnp.zeros((batch,), jnp.int32)}
+
+
+def cache_specs(cfg, pcfg, long_ctx: bool, model_size: int = 16):
+    kv = (P(None, DP, None, "model", None)
+          if cfg.n_kv_heads % model_size == 0
+          else P(None, DP, "model", None, None))
+    return {"k": kv, "v": kv, "cross_k": kv, "cross_v": kv,
+            "pos": P(), "lengths": P(DP)}
+
+
+def prefill(params, batch, cache, cfg: ModelConfig, pcfg: ParallelConfig):
+    """Encodes audio frames, projects cross KV, prefills decoder prompt."""
+    enc_out = encode(params, batch["enc_embed"], cfg, pcfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _embed_dec(params, tokens, cfg)
+    x = cm.shard(x, residual_spec(pcfg))
+    lengths = cache["lengths"] + s
+
+    def layer(x, xs):
+        pl, kc, vc = xs
+        ck, cv = _project_cross_kv(pl["cross_attn"], enc_out, cfg)
+        out, new_kv = _dec_layer(pl, x, positions, cfg, pcfg,
+                                 cross_kv=(ck, cv),
+                                 cache=(kc, vc, cache["pos"], lengths))
+        return out, (*new_kv, ck.astype(kc.dtype), cv.astype(vc.dtype))
+
+    body = jax.checkpoint(layer,
+                          policy=jax.checkpoint_policies.nothing_saveable) \
+        if pcfg.remat == "full" else layer
+    x, (k_new, v_new, ck, cv) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"]))
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    new_cache = {"k": k_new, "v": v_new, "cross_k": ck, "cross_v": cv,
+                 "pos": cache["pos"] + s, "lengths": lengths}
+    return new_cache, x[:, -1:]
+
+
+def decode(params, tokens, cache, cfg: ModelConfig, pcfg: ParallelConfig):
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    x = _embed_dec(params, tokens, cfg, offset=pos)
+    lengths = cache["lengths"] + 1
+
+    def layer(x, xs):
+        pl, kc, vc, ck, cv = xs
+        out, new_kv = _dec_layer(pl, x, positions, cfg, pcfg,
+                                 cross_kv=(ck.astype(x.dtype),
+                                           cv.astype(x.dtype)),
+                                 cache=(kc, vc, pos, lengths))
+        return out, new_kv
+
+    x, (k_new, v_new) = jax.lax.scan(
+        layer, x, (params["dec"], cache["k"], cache["v"],
+                   cache["cross_k"], cache["cross_v"]))
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = logits_fn(params, x, cfg)
+    new_cache = dict(cache, k=k_new, v=v_new, pos=pos + 1, lengths=lengths)
+    return new_cache, logits

@@ -1,0 +1,220 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention+MLP block.
+
+The shared (weight-tied) transformer block is applied after every
+``attn_every`` mamba layers.  Layers are arranged as nb = L // attn_every
+groups of (attn_every mamba layers + shared block) plus a tail of
+L % attn_every mamba layers; the group is the scan/remat unit, so compiled
+FLOPs are exact (no dead cond branches).
+
+Simplification vs. the reference (DESIGN.md): the shared block consumes the
+hidden state directly rather than concat(hidden, embedding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, _param_shapes
+from repro.models import common as cm
+from repro.models import mamba2
+from repro.models.transformer import (attention_block, mlp_block,
+                                      logits_fn, residual_spec)
+
+DP = ("pod", "data")
+
+
+def init(rng, cfg: ModelConfig):
+    return cm.init_from_shapes(rng, _param_shapes(cfg))
+
+
+def _split_groups(cfg: ModelConfig):
+    ae = cfg.attn_every
+    nb = cfg.n_layers // ae
+    tail = cfg.n_layers - nb * ae
+    return ae, nb, tail
+
+
+def _mamba_layer(pl, x, cfg, pcfg, st, *, chunked):
+    conv_st, ssm_st = st
+    h = cm.rms_norm(x, pl["norm"], cfg.norm_eps)
+    out, conv_new, ssm_new = mamba2.mamba_block(
+        pl["mamba"], h, cfg, conv_state=conv_st, ssm_state=ssm_st,
+        chunked=chunked)
+    x = cm.shard(x + out, residual_spec(pcfg))
+    return x, (conv_new, ssm_new)
+
+
+def _shared_block(ps, x, positions, cfg, pcfg, cache=None):
+    """Weight-tied attention + MLP block (leading dim-1 squeezed)."""
+    sq = jax.tree.map(lambda a: a[0], ps)
+    h = cm.rms_norm(x, sq["norm_attn"], cfg.norm_eps)
+    a, new_kv = attention_block(sq["attn"], h, positions, cfg, pcfg,
+                                causal=True, cache=cache)
+    x = cm.shard(x + a, residual_spec(pcfg))
+    h = cm.rms_norm(x, sq["norm_mlp"], cfg.norm_eps)
+    x = cm.shard(x + mlp_block(sq["mlp"], h, cfg, pcfg), residual_spec(pcfg))
+    return x, new_kv
+
+
+def _zero_states(cfg, b):
+    ssm = cfg.ssm
+    d_in = 2 * cfg.d_model
+    ch = d_in + 2 * ssm.n_groups * ssm.state_dim
+    p_head = d_in // ssm.n_ssm_heads
+    conv = jnp.zeros((cfg.n_layers, b, ssm.conv_width - 1, ch), jnp.float32)
+    state = jnp.zeros((cfg.n_layers, b, ssm.n_ssm_heads, p_head,
+                       ssm.state_dim), jnp.float32)
+    # shard: created inside jit, so without constraints XLA materialises the
+    # full (L, B, H, P, N) f32 buffer per device (192 GB/dev for zamba2
+    # train_4k before this fix — see EXPERIMENTS.md §Perf).
+    conv = cm.shard(conv, P(None, DP, None, "model"))
+    state = cm.shard(state, P(None, DP, "model", None, None))
+    return conv, state
+
+
+def _stack_layers(params, cfg):
+    """Split stacked mamba params into (groups (nb, ae, ...), tail)."""
+    ae, nb, tail = _split_groups(cfg)
+    lp = params["layers"]
+    main = jax.tree.map(lambda a: a[:nb * ae].reshape(nb, ae, *a.shape[1:]),
+                        lp)
+    rest = jax.tree.map(lambda a: a[nb * ae:], lp)
+    return main, rest, ae, nb, tail
+
+
+def _run(params, x, positions, cfg, pcfg, conv, ssm, kv_cache=None,
+         pos=None, lengths=None, *, chunked):
+    """Shared driver for train forward / prefill / decode."""
+    main, rest, ae, nb, tail = _stack_layers(params, cfg)
+    csplit = lambda a: (a[:nb * ae].reshape(nb, ae, *a.shape[1:]),
+                        a[nb * ae:])
+    conv_m, conv_t = csplit(conv)
+    ssm_m, ssm_t = csplit(ssm)
+
+    def group(x, xs):
+        if kv_cache is None:
+            pg, cg, sg = xs
+            kc = kv = None
+        else:
+            pg, cg, sg, kc, vc = xs
+
+        def inner(x, ys):
+            pl, c0, s0 = ys
+            x, st = _mamba_layer(pl, x, cfg, pcfg, (c0, s0), chunked=chunked)
+            return x, st
+        x, (cg_new, sg_new) = jax.lax.scan(inner, x, (pg, cg, sg))
+        if kv_cache is None:
+            x, _ = _shared_block(params["shared"], x, positions, cfg, pcfg)
+            return x, (cg_new, sg_new)
+        x, new_kv = _shared_block(params["shared"], x, positions, cfg, pcfg,
+                                  cache=(kc, vc, pos, lengths))
+        return x, (cg_new, sg_new, *new_kv)
+
+    body = group
+    if pcfg.remat == "full" and x.shape[1] > 1:
+        body = jax.checkpoint(group,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    if kv_cache is None:
+        x, (conv_new, ssm_new) = jax.lax.scan(body, x, (main, conv_m, ssm_m))
+        kv_new = None
+    else:
+        x, (conv_new, ssm_new, k_new, v_new) = jax.lax.scan(
+            body, x, (main, conv_m, ssm_m, kv_cache[0], kv_cache[1]))
+        kv_new = (k_new, v_new)
+
+    if tail:
+        def tail_layer(x, ys):
+            pl, c0, s0 = ys
+            x, st = _mamba_layer(pl, x, cfg, pcfg, (c0, s0), chunked=chunked)
+            return x, st
+        tbody = tail_layer
+        if pcfg.remat == "full" and x.shape[1] > 1:
+            tbody = jax.checkpoint(
+                tail_layer, policy=jax.checkpoint_policies.nothing_saveable)
+        x, (conv_t_new, ssm_t_new) = jax.lax.scan(tbody, x,
+                                                  (rest, conv_t, ssm_t))
+        conv_new = jnp.concatenate(
+            [conv_new.reshape(-1, *conv_new.shape[2:]), conv_t_new])
+        ssm_new = jnp.concatenate(
+            [ssm_new.reshape(-1, *ssm_new.shape[2:]), ssm_t_new])
+    else:
+        conv_new = conv_new.reshape(-1, *conv_new.shape[2:])
+        ssm_new = ssm_new.reshape(-1, *ssm_new.shape[2:])
+    return x, conv_new, ssm_new, kv_new
+
+
+def forward(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = cm.embed_lookup(params["embed"]["tokens"], tokens, cfg)
+    x = cm.shard(x, residual_spec(pcfg))
+    conv, ssm = _zero_states(cfg, b)
+    x, _, _, _ = _run(params, x, positions, cfg, pcfg, conv, ssm,
+                      chunked=True)
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return x, {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               pcfg: ParallelConfig, dtype=jnp.bfloat16):
+    _, nb, _ = _split_groups(cfg)
+    conv, ssm = _zero_states(cfg, batch)
+    hd = cfg.resolved_head_dim
+    kv_shape = (nb, batch, max_seq, cfg.n_kv_heads, hd)
+    return {"conv": conv, "ssm": ssm,
+            "k": jnp.zeros(kv_shape, dtype), "v": jnp.zeros(kv_shape, dtype),
+            "pos": jnp.zeros((), jnp.int32),
+            "lengths": jnp.zeros((batch,), jnp.int32)}
+
+
+def cache_specs(cfg, pcfg, long_ctx: bool, model_size: int = 16):
+    if long_ctx:
+        kv = P(None, DP, ("data", "model"), None, None)
+    elif cfg.n_kv_heads % model_size == 0:
+        kv = P(None, DP, None, "model", None)
+    else:
+        kv = P(None, DP, "model", None, None)
+    ssm = (P(None, DP, "model", None, None)
+           if cfg.ssm.n_ssm_heads % model_size == 0
+           else P(None, DP, None, "model", None))
+    return {"conv": P(None, DP, None, "model"),
+            "ssm": ssm,
+            "k": kv, "v": kv, "pos": P(), "lengths": P(DP)}
+
+
+def prefill(params, batch, cache, cfg: ModelConfig, pcfg: ParallelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = (jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+                 + cache["pos"]).astype(jnp.int32)
+    x = cm.embed_lookup(params["embed"]["tokens"], tokens, cfg)
+    x = cm.shard(x, residual_spec(pcfg))
+    lengths = cache["lengths"] + s
+    x, conv, ssm, kv = _run(params, x, positions, cfg, pcfg,
+                            cache["conv"], cache["ssm"],
+                            kv_cache=(cache["k"], cache["v"]),
+                            pos=cache["pos"], lengths=lengths, chunked=True)
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    new_cache = {"conv": conv, "ssm": ssm, "k": kv[0], "v": kv[1],
+                 "pos": cache["pos"] + s, "lengths": lengths}
+    return new_cache, x[:, -1:]
+
+
+def decode(params, tokens, cache, cfg: ModelConfig, pcfg: ParallelConfig):
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    x = cm.embed_lookup(params["embed"]["tokens"], tokens, cfg)
+    lengths = cache["lengths"] + 1
+    x, conv, ssm, kv = _run(params, x, positions, cfg, pcfg,
+                            cache["conv"], cache["ssm"],
+                            kv_cache=(cache["k"], cache["v"]),
+                            pos=pos, lengths=lengths, chunked=False)
+    x = cm.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = logits_fn(params, x, cfg)
+    new_cache = {"conv": conv, "ssm": ssm, "k": kv[0], "v": kv[1],
+                 "pos": pos + 1, "lengths": lengths}
+    return new_cache, logits

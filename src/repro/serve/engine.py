@@ -1,0 +1,122 @@
+"""Serving engine: batched prefill + decode with MLR/SLR placement policies.
+
+Rank-organisation mapping (paper §5 -> serving, DESIGN.md §2.2):
+
+* **MLR** (multi-layer rank): every request is striped across ALL chips —
+  params TP-sharded over 'model', KV heads/sequence sharded over 'model'.
+  One token = whole machine: minimum latency, one "rank".
+* **SLR** (single-layer rank): the 'model' axis is converted into extra
+  request parallelism — params replicated over 'model' (FSDP gathering
+  only), request batch sharded over ('data','model').  More independent
+  "ranks" serving concurrently: maximum throughput, higher per-token
+  latency.  Same hardware, scheduling choice only — exactly the paper's
+  MLR/SLR trade-off (latency-bound vs. MLP-bound workloads).
+
+benchmarks/serve_policies.py measures both (FLOPs + collective bytes per
+decoded token from the lowered HLO).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import partitioning as part
+from repro.models import get_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int = 2048
+    policy: str = "mlr"            # mlr | slr
+    temperature: float = 0.0       # 0 = greedy
+    eos_id: int = -1               # -1 = never stop
+
+
+def _slr_param_specs(pspecs):
+    """Drop 'model' from every param spec (replicate over the model axis)."""
+    return part.strip_axis(pspecs, "model")
+
+
+def batch_dp_axes(policy: str):
+    return (("pod", "data", "model") if policy == "slr"
+            else ("pod", "data"))
+
+
+def make_serve_fns(cfg: ModelConfig, pcfg: ParallelConfig, scfg: ServeConfig,
+                   mesh=None, long_ctx: bool = False):
+    """Returns (prefill_fn, decode_fn, shardings dict or None)."""
+    model = get_model(cfg)
+
+    def prefill_fn(params, batch, cache):
+        cache, last_hidden = model.prefill(params, batch, cache, cfg, pcfg)
+        from repro.models.transformer import logits_fn
+        logits = logits_fn(params, last_hidden, cfg)
+        return cache, logits
+
+    def decode_fn(params, tokens, cache):
+        return model.decode(params, tokens, cache, cfg, pcfg)
+
+    if mesh is None:
+        return jax.jit(prefill_fn), jax.jit(decode_fn, donate_argnums=(2,)), None
+
+    pspecs = part.param_specs(
+        jax.eval_shape(functools.partial(model.init, cfg=cfg),
+                       jax.random.PRNGKey(0)), mesh)
+    if scfg.policy == "slr":
+        pspecs = _slr_param_specs(pspecs)
+    shardings = {"params": part.shardings(pspecs, mesh)}
+    return (jax.jit(prefill_fn), jax.jit(decode_fn, donate_argnums=(2,)),
+            shardings)
+
+
+class Engine:
+    """Minimal batched-request engine: aligned prefill + stepwise decode.
+
+    Real-cluster notes: requests are grouped into aligned batches (left-pad
+    semantics via cache lengths); continuous batching would slot new
+    requests into finished lanes — the cache layout supports it (per-lane
+    lengths), the scheduler here is deliberately simple and synchronous.
+    """
+
+    def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig,
+                 scfg: ServeConfig, params, mesh=None):
+        self.cfg, self.pcfg, self.scfg = cfg, pcfg, scfg
+        self.params = params
+        self.mesh = mesh
+        self.model = get_model(cfg)
+        self.prefill_fn, self.decode_fn, _ = make_serve_fns(
+            cfg, pcfg, scfg, mesh)
+        self.rng = jax.random.PRNGKey(0)
+
+    def _sample(self, logits):
+        if self.scfg.temperature == 0.0:
+            return jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        self.rng, k = jax.random.split(self.rng)
+        return jax.random.categorical(
+            k, logits[:, -1] / self.scfg.temperature)[:, None]
+
+    def generate(self, batch, max_new_tokens: int):
+        """batch: model inputs incl. tokens (B, S_prompt).  Returns
+        (B, max_new_tokens) generated ids (greedy/temperature)."""
+        b = batch["tokens"].shape[0]
+        cache = self.model.init_cache(self.cfg, b, self.scfg.max_seq,
+                                      self.pcfg)
+        cache, logits = self.prefill_fn(self.params, batch, cache)
+        outs = []
+        tok = self._sample(logits).astype(jnp.int32)
+        done = jnp.zeros((b,), bool)
+        for _ in range(max_new_tokens):
+            outs.append(tok)
+            cache, logits = self.decode_fn(self.params, tok, cache)
+            tok = self._sample(logits).astype(jnp.int32)
+            if self.scfg.eos_id >= 0:
+                done = done | (tok[:, 0] == self.scfg.eos_id)
+                if bool(done.all()):
+                    break
+        return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,93 @@
+"""Int8 gradient compression with error feedback, for the cross-pod hop.
+
+Wire format: per-block (block=1024) max-abs scales (f32) + int8 mantissas —
+a 3.9x wire reduction.  The cascaded ring decodes, accumulates in f32 and
+re-encodes at every hop (the standard compressed-ring trade-off: quantisation
+noise grows O(hops); with 2-8 pods this is small, and the error-feedback
+accumulator folds the *local* encode error back into the next step's
+gradient, which is what keeps convergence unharmed — tests/test_compression
+trains to parity with the uncompressed baseline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+BLOCK = 1024
+
+
+def quantize(flat: jax.Array, block: int = BLOCK):
+    """flat (T,) f32 -> (q (nb, block) int8, scale (nb,) f32, T)."""
+    t = flat.shape[0]
+    pad = (-t) % block
+    x = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(x), axis=1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale, t
+
+
+def dequantize(q, scale, t):
+    x = q.astype(jnp.float32) * scale[:, None]
+    return x.reshape(-1)[:t]
+
+
+def encode_error(flat):
+    """Returns (wire_value, local_error) — error feedback residual."""
+    q, s, t = quantize(flat)
+    deq = dequantize(q, s, t)
+    return deq, flat - deq
+
+
+def compressed_ring_all_reduce(flat, axis: str, block: int = BLOCK):
+    """Ring all-reduce where every hop moves int8+scales instead of f32.
+
+    Phase 1 (reduce-scatter): the partial destined for chunk b cascades
+    around the ring; each node dequantises, adds its own chunk, requantises.
+    Phase 2 (all-gather): fully-reduced chunks cascade back compressed.
+    """
+    n = lax.axis_size(axis)
+    i = lax.axis_index(axis)
+    t = flat.shape[0]
+    pad = (-t) % (n * block)
+    x = jnp.pad(flat, (0, pad)).reshape(n, -1)          # (n, chunk)
+    chunk = x.shape[1]
+
+    def q_(v):
+        q, s, _ = quantize(v, block)
+        return q, s
+
+    def dq_(q, s):
+        return dequantize(q, s, chunk)
+
+    # --- reduce-scatter ------------------------------------------------
+    p = q_(jnp.take(x, (i - 1) % n, axis=0))
+
+    def rs_hop(carry, s_idx):
+        q, s = carry
+        q = lax.ppermute(q, axis, [(j, (j + 1) % n) for j in range(n)])
+        s = lax.ppermute(s, axis, [(j, (j + 1) % n) for j in range(n)])
+        acc = dq_(q, s) + jnp.take(x, (i - 1 - s_idx) % n, axis=0)
+        return q_(acc), None
+
+    (q, s), _ = lax.scan(rs_hop, p, jnp.arange(1, n))
+    mine = dq_(q, s)                                    # chunk i, reduced
+
+    # --- all-gather (compressed) ----------------------------------------
+    def ag_hop(carry, _):
+        q, s = carry
+        q = lax.ppermute(q, axis, [(j, (j + 1) % n) for j in range(n)])
+        s = lax.ppermute(s, axis, [(j, (j + 1) % n) for j in range(n)])
+        return (q, s), (q, s)
+
+    (_, _), (qs, ss) = lax.scan(ag_hop, q_(mine), None, length=n - 1)
+    own_q, own_s = q_(mine)
+    all_q = jnp.concatenate([own_q[None], qs], axis=0)  # index h: chunk i-h
+    all_s = jnp.concatenate([own_s[None], ss], axis=0)
+    order = (i - jnp.arange(n)) % n
+    inv = jnp.zeros((n,), order.dtype).at[order].set(jnp.arange(n))
+    all_q = jnp.take(all_q, inv, axis=0)
+    all_s = jnp.take(all_s, inv, axis=0)
+    full = jax.vmap(dq_)(all_q, all_s).reshape(-1)
+    return full[:t] if pad else full

@@ -1,0 +1,64 @@
+"""Losses.  The LM head is applied CHUNKED over the sequence (blockwise
+cross-entropy): logits for a (B, chunk, V) block are materialised, reduced to
+per-token nll, and discarded inside a rematerialised scan — peak memory is
+O(B·chunk·V) instead of O(B·S·V), which is what makes 150k-vocab training at
+seq 4096 fit (see EXPERIMENTS.md §Dry-run)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import logits_fn
+
+
+def softmax_xent(logits, labels, z_loss: float = 0.0):
+    """logits (..., V) f32; labels (...) int32 -> nll per token.
+
+    Gold logit extracted with a masked reduction rather than
+    take_along_axis: gathers over a sharded vocab dim are fragile in the
+    SPMD partitioner inside manual regions; where+sum fuses to the same
+    cost and partitions as a plain reduction."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    hit = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                   logits.ndim - 1) == labels[..., None]
+    gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    return nll
+
+
+def chunked_lm_loss(params, hidden, labels, cfg, chunk: int = 2048,
+                    z_loss: float = 1e-4):
+    """hidden (B,S,d), labels (B,S) -> mean nll (scalar f32)."""
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    if s % c != 0:
+        logits = logits_fn(params, hidden, cfg)
+        return softmax_xent(logits, labels, z_loss).mean()
+    n = s // c
+    hs = hidden.reshape(b, n, c, d).swapaxes(0, 1)      # (n,B,c,d)
+    ys = labels.reshape(b, n, c).swapaxes(0, 1)
+
+    def body(acc, inp):
+        h_c, y_c = inp
+        logits = logits_fn(params, h_c, cfg)
+        return acc + softmax_xent(logits, y_c, z_loss).sum(), None
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys))
+    return total / (b * s)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda l: (l * scale).astype(l.dtype), tree), norm

@@ -1,0 +1,70 @@
+"""AdamW, fully sharded (ZeRO-3 equivalent): m/v mirror the parameter
+shardings exactly (core/partitioning.py), so optimizer state is sharded over
+data x model with zero extra machinery.  Learning-rate schedule: linear
+warmup + cosine decay."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads, state: AdamWState, params, lr, step,
+                 cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_state).  step is the *completed* step count
+    (bias correction uses step+1)."""
+    t = (step + 1).astype(jnp.float32)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        m_hat = m_new / (1 - b1 ** t)
+        v_hat = v_new / (1 - b2 ** t)
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda x: x[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(m=new_m, v=new_v)
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return schedule

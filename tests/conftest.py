@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real (single) device; multi-device tests spawn subprocesses with
+--xla_force_host_platform_device_count themselves."""
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def run_subprocess_jax(code: str, n_devices: int = 8, timeout: int = 420):
+    """Run a JAX snippet in a subprocess with forced host device count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout

@@ -1,0 +1,98 @@
+"""Attention properties (hypothesis) + implementation equivalence sweeps."""
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import attention as A
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=15, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def _qkv(seed, b, s, hq, hkv, hd):
+    rng = jax.random.PRNGKey(seed)
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (b, s, hq, hd))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (b, s, hkv, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 32), (96, 32), (128, 128)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (4, 1)])
+def test_chunked_equals_naive(s, chunk, hq, hkv):
+    q, k, v = _qkv(0, 2, s, hq, hkv, 16)
+    for causal in (True, False):
+        ref = A.attend_naive(q, k, v, causal=causal)
+        out = A.attend_chunked(q, k, v, causal=causal, chunk=chunk)
+        assert float(jnp.abs(ref - out).max()) < 1e-5, (s, chunk, causal)
+
+
+@hypothesis.given(
+    s=st.sampled_from([32, 64]),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 10_000))
+def test_causality_property(s, hkv, g, seed):
+    """Perturbing FUTURE keys/values never changes past outputs."""
+    q, k, v = _qkv(seed, 1, s, hkv * g, hkv, 8)
+    cut = s // 2
+    out1 = A.attend_chunked(q, k, v, causal=True, chunk=16)
+    k2 = k.at[:, cut:].add(3.0)
+    v2 = v.at[:, cut:].add(-2.0)
+    out2 = A.attend_chunked(q, k2, v2, causal=True, chunk=16)
+    assert float(jnp.abs(out1[:, :cut] - out2[:, :cut]).max()) < 1e-5
+
+
+@hypothesis.given(shift=st.integers(0, 512), seed=st.integers(0, 1000))
+def test_rope_relative_property(shift, seed):
+    """RoPE scores depend only on relative positions."""
+    rng = jax.random.PRNGKey(seed)
+    b, s, h, hd = 1, 16, 1, 32
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (b, s, h, hd))
+    pos = jnp.tile(jnp.arange(s)[None], (b, 1))
+    s1 = jnp.einsum("bqhd,bkhd->bqk", A.apply_rope(q, pos),
+                    A.apply_rope(k, pos))
+    s2 = jnp.einsum("bqhd,bkhd->bqk", A.apply_rope(q, pos + shift),
+                    A.apply_rope(k, pos + shift))
+    assert float(jnp.abs(s1 - s2).max()) < 5e-4
+
+
+def test_mrope_reduces_to_rope_on_text():
+    rng = jax.random.PRNGKey(3)
+    x = jax.random.normal(rng, (2, 8, 2, 16))
+    pos = jnp.tile(jnp.arange(8)[None], (2, 1))
+    pos3 = jnp.stack([pos, pos, pos])
+    a = A.apply_mrope(x, pos3, theta=1e6)
+    b = A.apply_rope(x, pos, theta=1e6)
+    assert float(jnp.abs(a - b).max()) == 0.0
+
+
+def test_mrope_sections_sum():
+    for hd in (16, 32, 64, 128):
+        assert sum(A.mrope_sections(hd)) == hd // 2
+    assert A.mrope_sections(128) == (16, 24, 24)   # qwen2-vl
+
+
+def test_gqa_equals_repeated_heads():
+    """GQA == MHA with kv heads explicitly repeated."""
+    q, k, v = _qkv(5, 2, 32, 8, 2, 16)
+    out_gqa = A.attend_naive(q, k, v, causal=True)
+    k_rep = jnp.repeat(k, 4, axis=2)
+    v_rep = jnp.repeat(v, 4, axis=2)
+    out_mha = A.attend_naive(q, k_rep, v_rep, causal=True)
+    assert float(jnp.abs(out_gqa - out_mha).max()) < 1e-5
+
+
+def test_decode_attend_matches_full():
+    q, k, v = _qkv(6, 2, 64, 4, 2, 16)
+    lens = jnp.array([40, 64])
+    full = A.attend_naive(q[:, -1:], k, v, causal=False, kv_len=lens)
+    dec = A.decode_attend(q[:, -1:], k, v, lens)
+    assert float(jnp.abs(full - dec).max()) < 1e-5

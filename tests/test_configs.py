@@ -1,0 +1,82 @@
+"""Config inventory: published sizes, shape suites, skip policy."""
+import math
+
+import jax
+import pytest
+
+from repro import models
+from repro.configs import (SHAPES, applicable_shapes, get_config,
+                           list_configs, reduce_config, skipped_shapes)
+from repro.configs.archs import ALL_ARCHS
+
+# (arch, expected total params, rel tol) — published sizes
+PUBLISHED = {
+    "tinyllama-1.1b": (1.1e9, 0.05),
+    "phi3-mini-3.8b": (3.8e9, 0.05),
+    "phi3-medium-14b": (14.0e9, 0.08),
+    "qwen3-0.6b": (0.6e9, 0.05),
+    "qwen2-vl-72b": (72.0e9, 0.05),
+    "rwkv6-3b": (3.1e9, 0.08),
+    "qwen3-moe-30b-a3b": (30.5e9, 0.05),
+    "granite-moe-3b-a800m": (3.3e9, 0.08),
+    "zamba2-7b": (7.0e9, 0.12),
+    "whisper-base": (0.073e9, 0.6),   # backbone only, untied head
+}
+
+
+def test_all_archs_registered():
+    assert sorted(ALL_ARCHS) == list_configs()
+    assert len(ALL_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_counts_match_published(arch):
+    cfg = get_config(arch)
+    n = cfg.n_params()
+    target, tol = PUBLISHED[arch]
+    assert abs(n - target) / target < tol, (arch, n, target)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_inventory_matches_real_init(arch):
+    """The closed-form shape table == the real init tree (reduced size)."""
+    from repro.configs.base import _param_shapes
+    from repro.models.common import flatten_paths
+    cfg = reduce_config(get_config(arch))
+    params = jax.eval_shape(lambda: models.get_model(cfg).init(
+        jax.random.PRNGKey(0), cfg))
+    flat = flatten_paths(params)
+    table = _param_shapes(cfg)
+    assert set(flat) == set(table)
+    for k in table:
+        assert tuple(flat[k].shape) == tuple(table[k]), k
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    assert 2.5e9 < cfg.n_active_params() < 4.0e9   # "A3B"
+    g = get_config("granite-moe-3b-a800m")
+    assert 0.6e9 < g.n_active_params() < 1.1e9     # "a800m"
+
+
+def test_shape_suites():
+    assert SHAPES["train_4k"].tokens == 4096 * 256
+    assert SHAPES["decode_32k"].tokens == 128          # one token per seq
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+def test_long_ctx_skip_policy():
+    runnable = 0
+    skips = 0
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        names = [s.name for s in applicable_shapes(cfg)]
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in names, arch
+        else:
+            assert "long_500k" not in names, arch
+            assert skipped_shapes(cfg), arch
+        runnable += len(names)
+        skips += len(skipped_shapes(cfg))
+    assert runnable + skips == 40      # the assigned 40 cells
+    assert runnable == 32 and skips == 8

@@ -1,0 +1,170 @@
+"""Pallas kernel validation: shape/dtype sweeps vs ref.py oracles
+(interpret=True on CPU, per assignment)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import kernel as DK, ref as DR
+from repro.kernels.flash_attention import kernel as FK, ref as FR
+from repro.kernels.flash_attention import ops as FO
+from repro.kernels.smla_pipe import kernel as SK, ref as SR
+from repro.kernels.wkv6 import kernel as WK, ref as WR
+from repro.kernels.wkv6 import ops as WO
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ----------------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,bq,bk", [(128, 64, 64), (256, 128, 64),
+                                     (64, 64, 64)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (2, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_fwd_sweep(dtype, s, bq, bk, hq, hkv, causal):
+    rng = jax.random.PRNGKey(0)
+    b, hd = 2, 32
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (b, hq, s, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (b, hkv, s, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (b, hkv, s, hd), dtype)
+    o, lse = FK.flash_attention_fwd(q, k, v, causal=causal, bq=bq, bk=bk,
+                                    interpret=True)
+    o_ref, lse_ref = FR.attention(q, k, v, causal=causal)
+    err = jnp.abs(o.astype(jnp.float32) - o_ref.astype(jnp.float32)).max()
+    assert float(err) < _tol(dtype), (s, bq, bk, causal)
+    assert float(jnp.abs(lse - lse_ref).max()) < 1e-2
+
+
+def test_flash_grads_match_ref():
+    rng = jax.random.PRNGKey(1)
+    b, hq, hkv, s, hd = 1, 4, 2, 128, 32
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (b, s, hq, hd))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (b, s, hkv, hd))
+
+    def loss_k(q, k, v):
+        return jnp.sum(FO.flash_attention(q, k, v, causal=True, bq=64,
+                                          bk=64).astype(jnp.float32) ** 2)
+
+    def loss_r(q, k, v):
+        tr = lambda a: a.transpose(0, 2, 1, 3)
+        o, _ = FR.attention(tr(q), tr(k), tr(v), causal=True)
+        return jnp.sum(o.astype(jnp.float32) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        rel = float(jnp.abs(a - b_).max() / (jnp.abs(b_).max() + 1e-9))
+        assert rel < 1e-4
+
+
+# ----------------------------------------------------------------------------
+# wkv6
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 32), (128, 64)])
+@pytest.mark.parametrize("h,hd", [(2, 16), (3, 32)])
+def test_wkv6_sweep(dtype, s, chunk, h, hd):
+    rng = jax.random.PRNGKey(0)
+    b = 2
+    mk = lambda i: jax.random.normal(jax.random.fold_in(rng, i),
+                                     (b, h, s, hd), dtype)
+    r, k, v = mk(1), mk(2), mk(3)
+    logw = (-jnp.exp(mk(4).astype(jnp.float32) - 2)).astype(jnp.float32)
+    u = 0.4 * jnp.ones((h, hd), jnp.float32)
+    y, st = WK.wkv6(r.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32), logw, u, chunk=chunk,
+                    interpret=True)
+    st_ref, y_ref = WR.wkv(r.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), logw, u,
+                           jnp.zeros((b, h, hd, hd)))
+    assert float(jnp.abs(y - y_ref).max()) < 2e-3
+    assert float(jnp.abs(st - st_ref).max()) < 2e-3
+
+
+def test_wkv6_custom_vjp_grads():
+    rng = jax.random.PRNGKey(2)
+    b, h, s, hd = 1, 2, 64, 16
+    mk = lambda i: jax.random.normal(jax.random.fold_in(rng, i),
+                                     (b, h, s, hd), jnp.float32)
+    r, k, v = mk(1), mk(2), mk(3)
+    logw = -jnp.exp(mk(4) - 2)
+    u = 0.4 * jnp.ones((h, hd))
+    g1 = jax.grad(lambda *a: jnp.sum(WO.wkv6(*a, 16) ** 2),
+                  argnums=(0, 1, 2, 3))(r, k, v, logw, u)
+    g2 = jax.grad(lambda r, k, v, w: jnp.sum(
+        WR.wkv(r, k, v, w, u, jnp.zeros((b, h, hd, hd)))[1] ** 2),
+        argnums=(0, 1, 2, 3))(r, k, v, logw)
+    for a, b_ in zip(g1, g2):
+        rel = float(jnp.abs(a - b_).max() / (jnp.abs(b_).max() + 1e-9))
+        assert rel < 1e-3
+
+
+# ----------------------------------------------------------------------------
+# decode attention
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,bk", [(256, 64), (512, 128), (128, 128)])
+@pytest.mark.parametrize("g", [1, 4])
+def test_decode_attention_sweep(dtype, s, bk, g):
+    rng = jax.random.PRNGKey(0)
+    b, hkv, hd = 2, 2, 32
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (b, hkv, g, hd), dtype)
+    kc = jax.random.normal(jax.random.fold_in(rng, 2), (b, hkv, s, hd), dtype)
+    vc = jax.random.normal(jax.random.fold_in(rng, 3), (b, hkv, s, hd), dtype)
+    lens = jnp.array([s // 3, s], jnp.int32)
+    out = DK.decode_attention(q, kc, vc, lens, bk=bk, interpret=True)
+    ref = DR.decode_attend(q, kc, vc, lens)
+    err = jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)).max()
+    assert float(err) < _tol(dtype)
+
+
+def test_decode_attention_skips_invalid_chunks():
+    """Chunks beyond every length must not affect output (tiered util)."""
+    rng = jax.random.PRNGKey(4)
+    b, hkv, g, s, hd = 1, 1, 2, 256, 16
+    q = jax.random.normal(rng, (b, hkv, g, hd))
+    kc = jax.random.normal(jax.random.fold_in(rng, 1), (b, hkv, s, hd))
+    vc = jax.random.normal(jax.random.fold_in(rng, 2), (b, hkv, s, hd))
+    lens = jnp.array([64], jnp.int32)
+    out1 = DK.decode_attention(q, kc, vc, lens, bk=64, interpret=True)
+    kc2 = kc.at[:, :, 64:].set(1e6)   # garbage in dead chunks
+    vc2 = vc.at[:, :, 64:].set(-1e6)
+    out2 = DK.decode_attention(q, kc2, vc2, lens, bk=64, interpret=True)
+    assert float(jnp.abs(out1 - out2).max()) < 1e-6
+
+
+# ----------------------------------------------------------------------------
+# smla_pipe
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,l", [(128, 256, 128, 2), (256, 512, 128, 4),
+                                     (128, 512, 256, 8)])
+def test_smla_pipe_sweep(dtype, m, k, n, l):
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (m, k), dtype)
+    w = jax.random.normal(jax.random.fold_in(rng, 2), (l, k // l, n), dtype)
+    ref = SR.matmul_striped(x, w)
+    cas = SK.matmul_cascaded(x, w, bm=128, bn=128, bk=64, interpret=True)
+    ded = SK.matmul_dedicated(x, w, bm=128, bn=128, bk=64, interpret=True)
+    tol = 2e-1 if dtype == jnp.bfloat16 else 2e-3
+    assert float(jnp.abs(ref - cas).max()) < tol
+    assert float(jnp.abs(cas - ded).max()) < tol
+
+
+def test_smla_pipe_layer_striping_order():
+    """Cascade must consume layer stripes in K order (layer 0 first)."""
+    m, k, n, l = 8, 32, 8, 4
+    x = jnp.eye(m, k)
+    w = jnp.arange(l * (k // l) * n, dtype=jnp.float32).reshape(l, k // l, n)
+    ref = SR.matmul_striped(x, w)
+    out = SK.matmul_cascaded(x, w, bm=8, bn=8, bk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)

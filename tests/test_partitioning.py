@@ -1,0 +1,72 @@
+"""Partitioning rules + spec filtering."""
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P, AxisType
+
+from repro.core import partitioning as part
+
+
+def _mesh(shape=(2, 2), names=("data", "model")):
+    """AbstractMesh: tests run on 1 CPU device; filter/spec logic only
+    needs axis names+sizes."""
+    return AbstractMesh(shape, names,
+                        axis_types=(AxisType.Auto,) * len(names))
+
+
+def test_rules_representative_paths():
+    s = part.spec_for_param
+    assert s("layers.attn.wq", 3) == P(None, "data", "model")
+    assert s("layers.attn.wo", 3) == P(None, "model", "data")
+    assert s("layers.attn.q_norm", 2) == P(None, None)
+    assert s("layers.mlp.w_down", 3) == P(None, "model", "data")
+    assert s("embed.tokens", 2) == P(None, ("data", "model"))
+    assert s("head.w", 2) == P("data", "model")
+    assert s("layers.moe.experts.w_gate", 4) == P(None, "model", "data", None)
+    assert s("layers.moe.router", 3) == P(None, "data", None)
+    assert s("layers.tmix.w_o", 3) == P(None, "model", "data")
+    assert s("layers.mamba.w_in", 3) == P(None, "data", "model")
+    assert s("layers.mamba.A_log", 2) == P(None, None)
+    assert s("final_norm.scale", 1) == P(None)
+    assert s("shared.attn.wq", 3) == P(None, "data", "model")
+    assert s("enc.final_norm", 1) == P(None)        # not stacked
+    assert s("dec.self_attn.wk", 3) == P(None, "data", "model")
+
+
+def test_filter_spec_divisibility():
+    mesh = _mesh((2, 4))
+    # divisible: kept
+    assert part.filter_spec(P("data", "model"), (8, 8), mesh) == \
+        P("data", "model")
+    # not divisible by model=4: dropped
+    assert part.filter_spec(P("data", "model"), (8, 6), mesh) == \
+        P("data", None)
+    # missing axis: dropped
+    assert part.filter_spec(P("pod", "model"), (8, 8), mesh) == \
+        P(None, "model")
+    # tuple entries
+    assert part.filter_spec(P(("pod", "data"), None), (8, 4), mesh) == \
+        P("data", None)
+    # tuple with non-divisible product dropped entirely
+    assert part.filter_spec(P(("data", "model"),), (6,), mesh) == P(None)
+
+
+def test_param_specs_tree():
+    from repro.configs import get_config, reduce_config
+    from repro import models
+    cfg = reduce_config(get_config("qwen3-moe-30b-a3b"))
+    shapes = jax.eval_shape(lambda: models.get_model(cfg).init(
+        jax.random.PRNGKey(0), cfg))
+    mesh = _mesh((2, 2))
+    specs = part.param_specs(shapes, mesh)
+    got = specs["layers"]["moe"]["experts"]["w_gate"]
+    assert got == P(None, "model", "data", None)
+
+
+def test_batch_specs():
+    import jax.numpy as jnp
+    mesh = _mesh((2, 2))
+    batch = {"tokens": jnp.zeros((8, 16), jnp.int32),
+             "positions": jnp.zeros((3, 8, 16), jnp.int32)}
+    specs = part.batch_specs(batch, mesh)
+    assert specs["tokens"] == P("data", None)
+    assert specs["positions"] == P(None, "data", None)

@@ -1,0 +1,91 @@
+"""Roofline accounting: jaxpr FLOP walker + HLO collective walker."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_walk
+from repro.launch.jaxpr_cost import jaxpr_cost, traced_cost
+from repro.launch.roofline import Roofline
+
+
+def test_dot_flops_exact():
+    f = lambda a, b: a @ b
+    flops, _ = traced_cost(f, jnp.zeros((4, 8)), jnp.zeros((8, 16)))
+    assert flops == 2 * 4 * 8 * 16
+
+
+def test_scan_multiplies_by_length():
+    w = jnp.zeros((8, 16, 16))
+    x = jnp.zeros((4, 16))
+
+    def scanned(x, w):
+        def body(x, wl):
+            return x @ wl, None
+        return jax.lax.scan(body, x, w)[0]
+
+    flops, _ = traced_cost(scanned, x, w)
+    assert flops >= 8 * 2 * 4 * 16 * 16         # 8 steps counted
+
+
+def test_remat_counts_recompute():
+    x = jnp.zeros((8, 8))
+
+    def f(x):
+        g = jax.checkpoint(lambda y: jnp.tanh(y @ y),
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        return jnp.sum(g(x) ** 2)
+
+    fwd, _ = traced_cost(f, x)
+    grad_flops, _ = traced_cost(jax.grad(f), x)
+    assert grad_flops > 2 * fwd                  # fwd + recompute + bwd
+
+
+def test_hlo_walk_trip_counts():
+    """Collectives inside a scan body are multiplied by the trip count."""
+    code_mesh = jax.make_mesh((1,), ("data",))
+    # craft an HLO-like text with a while loop of 5 trips and a 1KB all-gather
+    text = """
+HloModule m
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ag = f32[256]{0} all-gather(%x), replica_groups={{0,1}}, dimensions={0}
+}
+
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %c = s32[] constant(5)
+  %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main () -> f32[] {
+  %w = (s32[], f32[128]) while(%init), condition=%cond, body=%body
+}
+"""
+    out = hlo_walk.collective_bytes(text)
+    # 256 floats * 4B * (n-1)/n with n=2 -> 512B per trip, 5 trips
+    assert out["total"] == pytest.approx(5 * 256 * 4 * 0.5)
+
+
+def test_roofline_terms_and_bottleneck():
+    class Shape:
+        name, kind, global_batch, seq_len = "t", "train", 2, 4
+        tokens = 8
+    r = Roofline(arch="a", shape="t", mesh="16x16", chips=256,
+                 flops_per_device=197e12, bytes_per_device=819e9 / 2,
+                 collective_bytes_per_device=50e9 / 4,
+                 peak_memory_per_device=1e9, model_flops=197e12 * 256 / 2,
+                 collectives={})
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(0.5)
+    assert r.t_collective == pytest.approx(0.25)
+    assert r.bottleneck == "compute"
+    assert r.roofline_fraction == pytest.approx(0.5)
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_parse_collective_shapes():
+    line = "%r = bf16[16,4096,512]{2,1,0} all-gather(%x), replica_groups={{0,1,2,3}}"
+    b = hlo_walk._line_collective_bytes(line)
+    assert b == pytest.approx(16 * 4096 * 512 * 2 * 3 / 4)
+    line2 = "%r = f32[128]{0} all-reduce(%x), replica_groups={{0,1}}"
+    assert hlo_walk._line_collective_bytes(line2) == pytest.approx(
+        128 * 4 * 2 * 0.5)
