@@ -1,0 +1,56 @@
+"""Shared benchmark helpers: smoke-mode scaling and machine-readable output.
+
+Smoke mode (`SMLA_SMOKE=1`, set by `benchmarks/run.py --smoke`) shrinks
+horizons/trace lengths so CI can exercise every benchmark module in
+minutes; numbers are then structural, not paper-comparable.
+
+Every paper-figure benchmark appends its grid metrics to one JSON file
+(default `BENCH_smla_sweep.json`, override with `BENCH_JSON`) keyed by
+figure name, so the perf trajectory can be tracked across commits without
+parsing CSV text.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+BENCH_JSON_ENV = "BENCH_JSON"
+BENCH_JSON_DEFAULT = "BENCH_smla_sweep.json"
+
+
+def smoke_mode() -> bool:
+    return os.environ.get("SMLA_SMOKE", "") not in ("", "0")
+
+
+def scaled(full: int, smoke: int) -> int:
+    """`full` normally, `smoke` under SMLA_SMOKE=1."""
+    return smoke if smoke_mode() else full
+
+
+def _jsonable(x: Any) -> Any:
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if hasattr(x, "tolist"):                      # numpy scalar / array
+        return x.tolist()
+    return x
+
+
+def emit_json(section: str, payload: dict, path: str | None = None) -> str:
+    """Merge `payload` under `section` into the benchmark JSON file."""
+    path = path or os.environ.get(BENCH_JSON_ENV, BENCH_JSON_DEFAULT)
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    data[section] = _jsonable(dict(payload, smoke=smoke_mode()))
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+    return path

@@ -2,34 +2,88 @@
 
 Channel model: the paper's 16-core system has 4 channels -> 4 cores/channel;
 we simulate one channel with cores/4 cores and report per-config means over
-`n_mixes` random mixes (paper: 16 mixes/pool)."""
+`n_mixes` random mixes (paper: 16 mixes/pool).
+
+The full grid (3 core counts x mixes x 5 configs) runs through the batched
+sweep engine — cells sharing a core count share one vmapped jit, so the
+whole figure costs at most one compile per core count.  One grid cell is
+cross-checked bit-for-bit against a standalone `simulate()` call."""
+import time
+
 import numpy as np
 
-from repro.core.smla.analytic import compare_configs, weighted_speedup
+from benchmarks._util import emit_json, scaled
+from repro.core.smla import engine, sweep
+from repro.core.smla.config import paper_configs
+from repro.core.smla.energy import energy_from_metrics
 from repro.core.smla.traces import WORKLOADS
+
+SMLA = ("dedicated_slr", "cascaded_slr", "dedicated_mlr", "cascaded_mlr")
+CORES = (4, 8, 16)
 
 
 def run(n_mixes: int = 6, n_req: int = 500, horizon: int = 80_000,
         seed: int = 0) -> list[str]:
+    n_mixes = scaled(n_mixes, 2)
+    n_req = scaled(n_req, 80)
+    horizon = scaled(horizon, 6_000)
     rng = np.random.default_rng(seed)
-    rows = ["cores,config,ws_vs_baseline,energy_vs_baseline"]
-    for cores in (4, 8, 16):
+    cfgs = paper_configs(4)
+
+    cells, mixes = [], {}
+    for cores in CORES:
         per_chan = max(cores // 4, 1)
-        acc = {k: ([], []) for k in ("dedicated_slr", "cascaded_slr",
-                                     "dedicated_mlr", "cascaded_mlr")}
         for m in range(n_mixes):
             specs = [WORKLOADS[i] for i in
                      rng.choice(len(WORKLOADS), per_chan, replace=False)]
-            res = compare_configs(specs, n_req=n_req, horizon=horizon,
-                                  seed=seed + m)
-            base = res["baseline"]
+            mixes[(cores, m)] = [s.name for s in specs]
+            for cname, sc in cfgs.items():
+                cells.append(sweep.make_cell(
+                    f"c{cores}/m{m}/{cname}", sc, specs, n_req,
+                    seed=seed + m))
+
+    c0, t0 = engine.compile_count(), time.perf_counter()
+    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), horizon))
+    wall = time.perf_counter() - t0
+    compiles = engine.compile_count() - c0
+    assert compiles <= len(CORES), \
+        f"fig12 grid took {compiles} compiles (want <= {len(CORES)})"
+
+    # acceptance cross-check: one cell must equal the per-config path exactly
+    probe = cells[0]
+    ref = engine.simulate(probe.stack, probe.traces, horizon)
+    assert np.array_equal(np.asarray(ref["ipc"]), res[probe.name]["ipc"]), \
+        "sweep metrics diverge from per-config simulate()"
+
+    rows = ["cores,config,ws_vs_baseline,energy_vs_baseline"]
+    table = []
+    for cores in CORES:
+        acc = {k: ([], []) for k in SMLA}
+        for m in range(n_mixes):
+            base = res[f"c{cores}/m{m}/baseline"]
+            base_e = energy_from_metrics(cfgs["baseline"], base).total_nj
             for k in acc:
-                acc[k][0].append(weighted_speedup(res[k], base))
-                acc[k][1].append(res[k].energy_nj / base.energy_nj)
+                mm = res[f"c{cores}/m{m}/{k}"]
+                acc[k][0].append(float(np.mean(
+                    mm["ipc"] / np.maximum(base["ipc"], 1e-9))))
+                acc[k][1].append(
+                    energy_from_metrics(cfgs[k], mm).total_nj / base_e)
         for k, (ws, en) in acc.items():
             rows.append(f"{cores},{k},{np.mean(ws):.3f},{np.mean(en):.3f}")
+            table.append(dict(cores=cores, config=k,
+                              ws=float(np.mean(ws)),
+                              energy=float(np.mean(en))))
     rows.append("# paper: 16-core SLR ws +50.4% DIO / +55.8% CIO; "
                 "energy -17.9% (CIO SLR); MLR below SLR")
+    rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
+                f"{wall:.1f}s wall")
+    emit_json("fig12", {
+        "n_mixes": n_mixes, "n_req": n_req, "horizon": horizon,
+        "n_cells": len(cells), "compiles": compiles,
+        "wall_s": round(wall, 2), "mixes": {f"c{c}/m{m}": v for (c, m), v
+                                            in mixes.items()},
+        "rows": table,
+    })
     return rows
 
 

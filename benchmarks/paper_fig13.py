@@ -1,30 +1,78 @@
-"""Paper Fig. 13: sensitivity to stacked-layer count (2/4/8 layers)."""
+"""Paper Fig. 13: sensitivity to stacked-layer count (2/4/8 layers).
+
+All layer counts share one vmapped batch (rank axes padded to the 8-layer
+SLR width), so the whole figure is at most one jit compile per layer count
+— in practice a single compile, since the step function takes every
+config quantity as a traced input."""
+import time
+
 import numpy as np
 
-from repro.core.smla.analytic import compare_configs, weighted_speedup
+from benchmarks._util import emit_json, scaled
+from repro.core.smla import engine, sweep
+from repro.core.smla.config import paper_configs
+from repro.core.smla.energy import energy_from_metrics
 from repro.core.smla.traces import WORKLOADS
+
+SMLA = ("dedicated_slr", "cascaded_slr", "dedicated_mlr", "cascaded_mlr")
+LAYERS = (2, 4, 8)
 
 
 def run(n_mixes: int = 4, n_req: int = 500, horizon: int = 80_000,
         seed: int = 1) -> list[str]:
+    n_mixes = scaled(n_mixes, 2)
+    n_req = scaled(n_req, 80)
+    horizon = scaled(horizon, 6_000)
     rng = np.random.default_rng(seed)
-    rows = ["layers,config,ws_vs_baseline,energy_vs_baseline"]
-    for layers in (2, 4, 8):
-        acc = {k: ([], []) for k in ("dedicated_slr", "cascaded_slr",
-                                     "dedicated_mlr", "cascaded_mlr")}
+
+    cells, cfg_of = [], {}
+    for layers in LAYERS:
+        cfgs = paper_configs(layers)
         for m in range(n_mixes):
             specs = [WORKLOADS[i] for i in
                      rng.choice(len(WORKLOADS), 2, replace=False)]
-            res = compare_configs(specs, layers=layers, n_req=n_req,
-                                  horizon=horizon, seed=seed + m)
-            base = res["baseline"]
+            for cname, sc in cfgs.items():
+                cfg_of[f"L{layers}/m{m}/{cname}"] = sc
+                cells.append(sweep.make_cell(
+                    f"L{layers}/m{m}/{cname}", sc, specs, n_req,
+                    seed=seed + m))
+
+    c0, t0 = engine.compile_count(), time.perf_counter()
+    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), horizon))
+    wall = time.perf_counter() - t0
+    compiles = engine.compile_count() - c0
+    assert compiles <= len(LAYERS), \
+        f"fig13 grid took {compiles} compiles (want <= {len(LAYERS)})"
+
+    rows = ["layers,config,ws_vs_baseline,energy_vs_baseline"]
+    table = []
+    for layers in LAYERS:
+        acc = {k: ([], []) for k in SMLA}
+        for m in range(n_mixes):
+            base = res[f"L{layers}/m{m}/baseline"]
+            base_e = energy_from_metrics(
+                cfg_of[f"L{layers}/m{m}/baseline"], base).total_nj
             for k in acc:
-                acc[k][0].append(weighted_speedup(res[k], base))
-                acc[k][1].append(res[k].energy_nj / base.energy_nj)
+                name = f"L{layers}/m{m}/{k}"
+                mm = res[name]
+                acc[k][0].append(float(np.mean(
+                    mm["ipc"] / np.maximum(base["ipc"], 1e-9))))
+                acc[k][1].append(
+                    energy_from_metrics(cfg_of[name], mm).total_nj / base_e)
         for k, (ws, en) in acc.items():
             rows.append(f"{layers},{k},{np.mean(ws):.3f},{np.mean(en):.3f}")
+            table.append(dict(layers=layers, config=k,
+                              ws=float(np.mean(ws)),
+                              energy=float(np.mean(en))))
     rows.append("# paper: benefits grow with layer count under SLR; "
                 "8-layer DIO edges CIO (upper-layer command bandwidth)")
+    rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
+                f"{wall:.1f}s wall")
+    emit_json("fig13", {
+        "n_mixes": n_mixes, "n_req": n_req, "horizon": horizon,
+        "n_cells": len(cells), "compiles": compiles,
+        "wall_s": round(wall, 2), "rows": table,
+    })
     return rows
 
 

@@ -1,33 +1,65 @@
 """Paper Fig. 14: energy vs. memory intensity (MPKI micro-benchmarks).
 
 (a) absolute energy normalised to baseline @ lowest MPKI;
-(b) energy relative to baseline at the same MPKI."""
+(b) energy relative to baseline at the same MPKI.
+
+The MPKI ladder x 5 configs is one vmapped batch (at most one compile)."""
+import time
+
 import numpy as np
 
-from repro.core.smla.analytic import compare_configs
+from benchmarks._util import emit_json, scaled
+from repro.core.smla import engine, sweep
+from repro.core.smla.config import paper_configs
+from repro.core.smla.energy import energy_from_metrics
 from repro.core.smla.traces import WorkloadSpec
+
+MPKIS = (0.4, 1.6, 6.4, 12.8, 25.6, 51.2)
 
 
 def run(n_req: int = 500, horizon: int = 100_000) -> list[str]:
-    mpkis = [0.4, 1.6, 6.4, 12.8, 25.6, 51.2]
+    n_req = scaled(n_req, 80)
+    horizon = scaled(horizon, 6_000)
+    cfgs = paper_configs(4)
+    workloads = [(f"u{mpki}", [WorkloadSpec(f"u{mpki}", mpki, 0.5)] * 2, 0)
+                 for mpki in MPKIS]
+    cells = sweep.paper_grid(workloads, layers=(4,), n_req=n_req)
+
+    c0, t0 = engine.compile_count(), time.perf_counter()
+    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), horizon))
+    wall = time.perf_counter() - t0
+    compiles = engine.compile_count() - c0
+    assert compiles <= 1, f"fig14 grid took {compiles} compiles (want <= 1)"
+
+    def energy(cname, wname):
+        return energy_from_metrics(cfgs[cname],
+                                   res[f"L4/{cname}/{wname}"]).total_nj
+
     rows = ["mpki,E_base_norm,E_dio_rel,E_cio_rel"]
     base0 = None
-    rels_d, rels_c = [], []
-    for mpki in mpkis:
-        spec = WorkloadSpec(f"u{mpki}", mpki, 0.5)
-        res = compare_configs([spec] * 2, n_req=n_req, horizon=horizon)
-        base = res["baseline"].energy_nj
+    rels_d, rels_c, table = [], [], []
+    for mpki in MPKIS:
+        wname = f"u{mpki}"
+        base = energy("baseline", wname)
         if base0 is None:
             base0 = base
-        d = res["dedicated_slr"].energy_nj / base
-        c = res["cascaded_slr"].energy_nj / base
+        d = energy("dedicated_slr", wname) / base
+        c = energy("cascaded_slr", wname) / base
         rels_d.append(d)
         rels_c.append(c)
+        table.append(dict(mpki=mpki, base_norm=base / base0,
+                          dio_rel=d, cio_rel=c))
         rows.append(f"{mpki},{base / base0:.3f},{d:.3f},{c:.3f}")
     rows.append(f"# relative overhead shrinks with MPKI: "
                 f"dio {rels_d[0]:.3f}->{rels_d[-1]:.3f}, "
                 f"cio {rels_c[0]:.3f}->{rels_c[-1]:.3f} "
                 f"(paper: overhead decays, CIO ~30% below DIO)")
+    rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
+                f"{wall:.1f}s wall")
+    emit_json("fig14", {
+        "n_req": n_req, "horizon": horizon, "n_cells": len(cells),
+        "compiles": compiles, "wall_s": round(wall, 2), "rows": table,
+    })
     return rows
 
 

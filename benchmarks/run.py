@@ -1,8 +1,15 @@
 """Benchmark driver: one module per paper table/figure + framework benches.
 
 Each benchmark runs in a subprocess (several force their own host-device
-counts, which must be set before jax initialises).  Output: CSV blocks.
+counts, which must be set before jax initialises).  Output: CSV blocks,
+plus machine-readable `BENCH_smla_sweep.json` from the paper figures.
+
+`--smoke` (or SMLA_SMOKE=1) shrinks horizons/trace lengths/problem sizes so
+CI can exercise every module in a few minutes; the driver exits non-zero if
+any module fails either way.
 """
+import argparse
+import os
 import subprocess
 import sys
 import time
@@ -21,13 +28,36 @@ BENCHES = [
 ]
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny horizons/sizes for CI (sets SMLA_SMOKE=1)")
+    ap.add_argument("--only", nargs="*", metavar="MOD",
+                    help="run only these modules (suffix match)")
+    args = ap.parse_args(argv)
+
+    env = dict(os.environ)
+    if args.smoke:
+        env["SMLA_SMOKE"] = "1"
+    # make `-m benchmarks.X` (and repro, via src/) work from any cwd
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [root, os.path.join(root, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    benches = [m for m in BENCHES
+               if not args.only or any(m.endswith(o) for o in args.only)]
+    if args.only and not benches:
+        print(f"no benchmark matches {args.only}; available: "
+              + " ".join(m.rsplit('.', 1)[1] for m in BENCHES),
+              file=sys.stderr)
+        return 2
+
     failures = 0
-    for mod in BENCHES:
+    for mod in benches:
         print(f"\n===== {mod} =====", flush=True)
         t0 = time.time()
         r = subprocess.run([sys.executable, "-m", mod], capture_output=True,
-                           text=True)
+                           text=True, env=env)
         dt = time.time() - t0
         sys.stdout.write(r.stdout)
         if r.returncode != 0:
@@ -35,7 +65,7 @@ def main() -> int:
             sys.stdout.write(f"[FAILED rc={r.returncode}]\n")
             sys.stdout.write(r.stderr[-2000:] + "\n")
         print(f"[{mod}: {dt:.1f}s]", flush=True)
-    print(f"\n{len(BENCHES) - failures}/{len(BENCHES)} benchmarks ok")
+    print(f"\n{len(benches) - failures}/{len(benches)} benchmarks ok")
     return 1 if failures else 0
 
 

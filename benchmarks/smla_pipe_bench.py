@@ -8,11 +8,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._util import scaled
 from repro.kernels.smla_pipe import kernel as K, ref as R
 
 
 def run(m: int = 256, k: int = 1024, n: int = 256, layers: int = 4
         ) -> list[str]:
+    m, k, n = scaled(m, 128), scaled(k, 512), scaled(n, 128)
     rng = jax.random.PRNGKey(0)
     x = jax.random.normal(jax.random.fold_in(rng, 1), (m, k), jnp.float32)
     w = jax.random.normal(jax.random.fold_in(rng, 2),

@@ -7,6 +7,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.smla import energy as energy_mod
+from repro.core.smla import sweep as sweep_mod
 from repro.core.smla.config import IOModel, RankOrg, StackConfig, paper_configs
 from repro.core.smla.engine import CoreParams, simulate
 from repro.core.smla.traces import WORKLOADS, WorkloadSpec, core_traces
@@ -39,31 +40,39 @@ class RunResult:
     bus_util: float
 
 
+def _to_run_result(stack: StackConfig, m: dict) -> RunResult:
+    # fixed work -> energy over the makespan (same requests served by
+    # every config; the paper compares energy per application execution)
+    eb = energy_mod.energy_from_metrics(stack, m)
+    return RunResult(
+        name="", ipc=np.asarray(m["ipc"]),
+        bandwidth=float(m["bandwidth_gbps"]),
+        energy_nj=eb.total_nj, standby_nj=eb.standby_nj, ops_nj=eb.ops_nj,
+        bus_util=float(np.clip(np.asarray(m["bus_util"]), 0.0, 1.0)))
+
+
 def run_config(stack: StackConfig, specs: Sequence[WorkloadSpec],
                n_req: int = 2000, horizon: int = 60_000, seed: int = 0,
                core: CoreParams = CoreParams()) -> RunResult:
     traces = core_traces(seed, list(specs), n_req, stack.n_ranks,
                          stack.banks_per_rank)
     m = simulate(stack, traces, horizon, core)
-    act_frac = float(np.clip(np.asarray(m["bus_util"]), 0.0, 1.0))
-    # fixed work -> energy over the makespan (same requests served by
-    # every config; the paper compares energy per application execution)
-    eb = energy_mod.stack_energy(
-        stack, float(m["makespan_ns"]), int(m["n_act"]),
-        int(np.asarray(m["served"]).sum()), act_frac)
-    return RunResult(
-        name="", ipc=np.asarray(m["ipc"]),
-        bandwidth=float(m["bandwidth_gbps"]),
-        energy_nj=eb.total_nj, standby_nj=eb.standby_nj, ops_nj=eb.ops_nj,
-        bus_util=act_frac)
+    return _to_run_result(stack, m)
 
 
 def compare_configs(specs: Sequence[WorkloadSpec], layers: int = 4,
                     n_req: int = 2000, horizon: int = 60_000,
                     seed: int = 0) -> dict[str, RunResult]:
+    """All five paper configurations over one workload set — executed as a
+    single vmapped batch (one compile, reused across calls with the same
+    shapes) instead of five sequential simulations."""
+    cfgs = paper_configs(layers)
+    cells = tuple(sweep_mod.make_cell(name, sc, specs, n_req, seed)
+                  for name, sc in cfgs.items())
+    res = sweep_mod.run_sweep(sweep_mod.SweepSpec(cells, horizon))
     out = {}
-    for name, sc in paper_configs(layers).items():
-        r = run_config(sc, specs, n_req, horizon, seed)
+    for (name, sc), m in zip(cfgs.items(), res.cells):
+        r = _to_run_result(sc, m)
         r.name = name
         out[name] = r
     return out

@@ -13,6 +13,8 @@ from __future__ import annotations
 import dataclasses
 import enum
 
+import numpy as np
+
 
 class IOModel(enum.IntEnum):
     BASELINE = 0      # conventional Wide-IO: one layer drives the bus at F
@@ -123,6 +125,42 @@ class StackConfig:
 
     def ns_to_cycles(self, ns: float) -> int:
         return int(round(ns / self.unit_ns))
+
+    def to_params(self, n_ranks_max: int | None = None) -> dict:
+        """Numeric per-config quantities for the engine's traced step.
+
+        Everything the cycle simulator needs at runtime, as numpy scalars /
+        arrays so heterogeneous configs can be padded to a common rank axis
+        (`n_ranks_max`) and stacked into one vmapped batch.  Padded `dur` /
+        `group_of_rank` entries are never referenced: trace ranks are taken
+        mod `n_ranks`, and no valid queue entry maps to a padded bus group.
+        """
+        R = self.n_ranks
+        Rm = R if n_ranks_max is None else n_ranks_max
+        if Rm < R:
+            raise ValueError(f"n_ranks_max={Rm} < n_ranks={R}")
+        dur = np.zeros(Rm, np.int32)
+        dur[:R] = [self.transfer_cycles(r) for r in range(R)]
+        # bus groups: which ranks contend on the same bus resource
+        if self.io_model == IOModel.BASELINE or self.rank_org == RankOrg.MLR:
+            n_groups, group_of_rank = 1, np.zeros(Rm, np.int32)
+        else:   # SLR dedicated (true groups) or cascaded (disjoint slots)
+            n_groups, group_of_rank = R, np.arange(Rm, dtype=np.int32)
+        slotted = (self.io_model == IOModel.CASCADED
+                   and self.rank_org == RankOrg.SLR and R > 1)
+        return {
+            "t_rcd": np.int32(self.t_rcd),
+            "t_rp": np.int32(self.t_rp),
+            "t_cl": np.int32(self.t_cl),
+            "layers": np.int32(self.layers),
+            "n_ranks": np.int32(R),
+            "n_groups": np.int32(n_groups),
+            "dur": dur,
+            "group_of_rank": group_of_rank,
+            "slotted": np.bool_(slotted),
+            "unit_ns": np.float32(self.unit_ns),
+            "request_bytes": np.float32(self.request_bytes),
+        }
 
     @property
     def t_rcd(self) -> int:

@@ -73,6 +73,18 @@ class EnergyBreakdown:
         return self.standby_nj + self.ops_nj
 
 
+def energy_from_metrics(stack: StackConfig, metrics: dict,
+                        n_wr: int = 0) -> EnergyBreakdown:
+    """EnergyBreakdown for one simulated cell's metrics dict (engine or
+    sweep output): energy over the fixed-work makespan, with the measured
+    bus utilisation splitting active- vs precharge-standby."""
+    act_frac = float(np.clip(np.asarray(metrics["bus_util"]), 0.0, 1.0))
+    return stack_energy(stack, float(metrics["makespan_ns"]),
+                        int(metrics["n_act"]),
+                        int(np.asarray(metrics["served"]).sum()),
+                        act_frac, n_wr)
+
+
 def stack_energy(stack: StackConfig, horizon_ns: float, n_act: int,
                  n_rd: int, active_frac: float, n_wr: int = 0,
                  vdd: float | None = None) -> EnergyBreakdown:

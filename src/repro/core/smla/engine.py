@@ -16,20 +16,26 @@ Modelled per channel:
 * cores: 3-wide 3.2 GHz, MSHR-limited, instruction-window runahead —
   the paper's Table-3 core model.  IPC is measured in core cycles.
 
-The step function is built per StackConfig (static io model / rank count)
-and jit-compiled once; workloads vmap over the leading trace axis.
+Every per-config quantity the step function needs — timing vector
+(tRCD/tRP/tCL), per-rank transfer durations, bus-group map, slotted flag,
+layer count, actual rank/request counts — is a *traced* input (see
+``StackConfig.to_params``), not a Python closure constant.  Only array
+shapes are static, so one jitted program serves every configuration with
+the same padded shapes, and ``sweep.run_sweep`` can vmap it over a stacked
+(config, workload) cell axis.  Compiled executables are cached per static
+signature; ``compile_count()`` exposes the number of distinct compiles for
+benchmark assertions.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.smla.config import IOModel, RankOrg, StackConfig
+from repro.core.smla.config import StackConfig
 
 BIG = jnp.int32(2**30)
 Q_SIZE = 32
@@ -42,39 +48,27 @@ class CoreParams:
     inst_per_fast_cycle: float = 12.0   # 3-wide * 3.2GHz * 1.25ns
 
 
-def _layer_of_rank(stack: StackConfig):
-    """Which physical layer(s) serve rank r — for energy attribution."""
-    if stack.n_ranks == stack.layers:
-        return "one"     # SLR/baseline: rank r == layer r
-    return "all"         # MLR: a request touches every layer
+def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
+              banks: int) -> dict:
+    """One full simulation; every config quantity in `params` is traced.
 
+    traces: dict of (n_cores, n_req_max) arrays; the cell's real request
+    count is params['n_req'] (padding beyond it is never read).
+    """
+    n_cores, n_req_max = traces["inst"].shape
+    R = params["dur"].shape[0]                      # padded rank count
+    B = banks
+    n_req = params["n_req"]
+    L = params["layers"]
+    t_rcd, t_rp, t_cl = params["t_rcd"], params["t_rp"], params["t_cl"]
+    dur = params["dur"]
+    group_of_rank = params["group_of_rank"]
+    slotted = params["slotted"]
 
-def simulate(stack: StackConfig, traces: dict, horizon: int,
-             core: CoreParams = CoreParams()) -> dict:
-    """traces: dict of (C, n_req) arrays (inst f32; rank/bank/row i32).
-    Returns metrics dict of scalars / per-core arrays (all jnp)."""
-    n_cores, n_req = traces["inst"].shape
-    R, B, L = stack.n_ranks, stack.banks_per_rank, stack.layers
-    t_rcd, t_rp, t_cl = stack.t_rcd, stack.t_rp, stack.t_cl
-    io, org = stack.io_model, stack.rank_org
-
-    # per-rank transfer duration and slot alignment
-    dur = np.array([stack.transfer_cycles(r) for r in range(R)], np.int32)
-    slotted = (io == IOModel.CASCADED and org == RankOrg.SLR and R > 1)
-    # bus groups: which ranks contend on the same bus resource
-    if io == IOModel.BASELINE:
-        n_groups, group_of_rank = 1, np.zeros(R, np.int32)
-    elif org == RankOrg.MLR:
-        n_groups, group_of_rank = 1, np.zeros(R, np.int32)
-    else:  # SLR dedicated (true groups) or cascaded (disjoint time slots)
-        n_groups, group_of_rank = R, np.arange(R, dtype=np.int32)
-    group_of_rank = jnp.asarray(group_of_rank)
-    dur = jnp.asarray(dur)
-
-    tr_inst = jnp.asarray(traces["inst"], jnp.float32)
-    tr_rank = jnp.asarray(traces["rank"], jnp.int32) % R
-    tr_bank = jnp.asarray(traces["bank"], jnp.int32) % B
-    tr_row = jnp.asarray(traces["row"], jnp.int32)
+    tr_inst = traces["inst"].astype(jnp.float32)
+    tr_rank = traces["rank"].astype(jnp.int32) % params["n_ranks"]
+    tr_bank = traces["bank"].astype(jnp.int32) % B
+    tr_row = traces["row"].astype(jnp.int32)
 
     def step(st, t):
         (qv, qc, qr, qb, qrow, qinst, qarr, qphase, qready, qdone,
@@ -137,13 +131,15 @@ def simulate(stack: StackConfig, traces: dict, horizon: int,
             can_issue & ~hit[pick] & ~closed[pick], 1, 0)
 
         # ---- 3. bus grant (one start per group per cycle) ----------------
+        # Padded groups (g >= n_groups) never match any valid entry's
+        # group_of_rank, so the extra iterations are exact no-ops.
         qphase = jnp.where(qv & (qphase == 2) & (qready <= t), 3, qphase)
-        for g in range(n_groups):
+        slot_match = (t % L) == (qr % L)
+        for g in range(R):
             in_g = group_of_rank[qr] == g
             cand3 = qv & (qphase == 3) & in_g
-            if slotted:
-                # rank g may start only in its slot
-                cand3 = cand3 & ((t % L) == (qr % L))
+            # slotted (cascaded SLR): rank may start only in its time slot
+            cand3 = cand3 & (~slotted | slot_match)
             cand3 = cand3 & (grp_busy[g] <= t)
             score3 = jnp.where(cand3, -qarr, -BIG)
             p3 = jnp.argmax(score3)
@@ -183,38 +179,36 @@ def simulate(stack: StackConfig, traces: dict, horizon: int,
                 bank_busy, bank_row, grp_busy, c_inst, c_next, c_out,
                 served, c_finish, n_act, n_conflict, bus_cycles), None
 
-    def run():
-        st = (jnp.zeros(Q_SIZE, bool), jnp.zeros(Q_SIZE, jnp.int32),
-              jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
-              jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.float32),
-              jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
-              jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
-              jnp.zeros((R, B), jnp.int32),
-              -jnp.ones((R, B), jnp.int32),
-              jnp.zeros(n_groups, jnp.int32),
-              jnp.zeros(n_cores, jnp.float32),
-              jnp.zeros(n_cores, jnp.int32), jnp.zeros(n_cores, jnp.int32),
-              jnp.zeros(n_cores, jnp.int32),
-              jnp.zeros(n_cores, jnp.int32),
-              jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
-              jnp.zeros((), jnp.int32))
-        final, _ = jax.lax.scan(step, st, jnp.arange(horizon))
-        return final
-
-    final = jax.jit(run)()
+    st = (jnp.zeros(Q_SIZE, bool), jnp.zeros(Q_SIZE, jnp.int32),
+          jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
+          jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.float32),
+          jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
+          jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
+          jnp.zeros((R, B), jnp.int32),
+          -jnp.ones((R, B), jnp.int32),
+          jnp.zeros(R, jnp.int32),
+          jnp.zeros(n_cores, jnp.float32),
+          jnp.zeros(n_cores, jnp.int32), jnp.zeros(n_cores, jnp.int32),
+          jnp.zeros(n_cores, jnp.int32),
+          jnp.zeros(n_cores, jnp.int32),
+          jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+          jnp.zeros((), jnp.int32))
+    final, _ = jax.lax.scan(step, st, jnp.arange(horizon))
     (qv, qc, qr, qb, qrow, qinst, qarr, qphase, qready, qdone,
      bank_busy, bank_row, grp_busy, c_inst, c_next, c_out,
      served, c_finish, n_act, n_conflict, bus_cycles) = final
 
-    t_ns = horizon * stack.unit_ns
-    complete = served >= n_req                         # per-core fixed work
+    unit_ns = params["unit_ns"]
+    t_ns = horizon * unit_ns
+    complete = served >= n_req                       # per-core fixed work
     # fixed-work IPC: total trace instructions / per-core completion time
-    finish_ns = jnp.maximum(c_finish, 1) * stack.unit_ns
-    total_inst = tr_inst[:, -1]
+    finish_ns = jnp.maximum(c_finish, 1) * unit_ns
+    total_inst = tr_inst[jnp.arange(n_cores), n_req - 1]
     ipc = jnp.where(complete, total_inst / (finish_ns * 3.2),
-                    c_inst / (t_ns * 3.2))             # fallback: horizon
+                    c_inst / (t_ns * 3.2))           # fallback: horizon
     makespan_ns = jnp.max(jnp.where(complete, finish_ns, t_ns))
-    bw = served.sum() * stack.request_bytes / makespan_ns  # GB/s over work
+    bw = (served.sum() * params["request_bytes"]
+          / makespan_ns)                             # GB/s over work
     return {
         "ipc": ipc,
         "served": served,
@@ -223,8 +217,59 @@ def simulate(stack: StackConfig, traces: dict, horizon: int,
         "n_act": n_act,
         "n_row_conflicts": n_conflict,
         "bus_util": bus_cycles / jnp.maximum(
-            (makespan_ns / stack.unit_ns) * max(n_groups, 1), 1),
-        "horizon_ns": jnp.float32(t_ns),
+            (makespan_ns / unit_ns)
+            * jnp.maximum(params["n_groups"], 1).astype(jnp.float32), 1),
+        "horizon_ns": jnp.asarray(t_ns, jnp.float32),
         "makespan_ns": makespan_ns,
         "inst": c_inst,
     }
+
+
+# ----------------------------------------------------------------------------
+# compile cache
+# ----------------------------------------------------------------------------
+
+_COMPILE_COUNT = [0]
+
+
+def compile_count() -> int:
+    """Distinct jitted executables built so far (sweep + single-config)."""
+    return _COMPILE_COUNT[0]
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled(horizon: int, core: CoreParams, banks: int,
+              shapes_key: tuple, batched: bool):
+    """One jitted executable per static signature.
+
+    shapes_key pins (n_cells, n_cores, n_req_max, r_max) so each cache miss
+    corresponds to exactly one XLA compilation of the returned function.
+    """
+    _COMPILE_COUNT[0] += 1
+    fn = functools.partial(_sim_core, horizon=horizon, core=core, banks=banks)
+    if batched:
+        fn = jax.vmap(fn)
+    return jax.jit(fn)
+
+
+def batched_simulate(params: dict, traces: dict, horizon: int,
+                     core: CoreParams, banks: int) -> dict:
+    """Run a stacked batch of cells: every leaf has a leading cell axis."""
+    n_cells, n_cores, n_req_max = traces["inst"].shape
+    r_max = params["dur"].shape[1]
+    fn = _compiled(horizon, core, banks,
+                   (n_cells, n_cores, n_req_max, r_max), True)
+    return fn(params, traces)
+
+
+def simulate(stack: StackConfig, traces: dict, horizon: int,
+             core: CoreParams = CoreParams()) -> dict:
+    """traces: dict of (C, n_req) arrays (inst f32; rank/bank/row i32).
+    Returns metrics dict of scalars / per-core arrays (all jnp)."""
+    n_cores, n_req = traces["inst"].shape
+    params = stack.to_params()
+    params["n_req"] = np.int32(n_req)
+    fn = _compiled(horizon, core, stack.banks_per_rank,
+                   (1, n_cores, n_req, stack.n_ranks), False)
+    return fn({k: jnp.asarray(v) for k, v in params.items()},
+              {k: jnp.asarray(v) for k, v in traces.items()})

@@ -1,0 +1,123 @@
+"""Batched SMLA sweep engine: the whole paper evaluation grid in one
+(or a handful of) jitted programs.
+
+The paper's headline figures sweep the cycle simulator over ~31 workloads
+x 5 IO models x 2/4/8 layers.  Run cell-by-cell that is O(grid) compiles
+and serial scans; here every grid cell becomes one row of a stacked batch
+and `engine.batched_simulate` vmaps a single compiled scan over it.
+
+Heterogeneous configs are padded to a common shape:
+* rank axis   -> max rank count in the batch (`StackConfig.to_params`);
+  padded ranks/groups are provably never referenced,
+* request axis-> max trace length (`traces.pad_traces`); the engine stops
+  consuming at the cell's traced `n_req`.
+Cells are grouped by the remaining *static* quantities (core count,
+banks-per-rank) — one compile per group, cached across calls by
+`engine._compiled`, so e.g. the whole Fig-13 grid (2/4/8 layers x 5 IO
+models x mixes) is one compile and the Fig-12 grid compiles once per core
+count.
+
+Metric results come back as structured per-cell dicts plus stacked scalar
+arrays (`SweepResult.scalars`) for machine-readable benchmark output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.smla import engine
+from repro.core.smla.config import StackConfig, paper_configs
+from repro.core.smla.engine import CoreParams
+from repro.core.smla.traces import WorkloadSpec, core_traces, stack_traces
+
+#: metrics that are scalars per cell (the rest are per-core arrays)
+SCALAR_METRICS = ("bandwidth_gbps", "n_act", "n_row_conflicts", "bus_util",
+                  "horizon_ns", "makespan_ns")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One grid point: a stack configuration driving a set of core traces."""
+    name: str
+    stack: StackConfig
+    traces: dict                       # {inst,rank,bank,row}: (C, n_req)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A batch of grid cells sharing one horizon and core model."""
+    cells: tuple[SweepCell, ...]
+    horizon: int
+    core: CoreParams = CoreParams()
+
+
+@dataclasses.dataclass
+class SweepResult:
+    names: list[str]
+    cells: list[dict]                  # per-cell metric dicts (numpy)
+
+    def __getitem__(self, name: str) -> dict:
+        return self.cells[self.names.index(name)]
+
+    def scalars(self, keys: Sequence[str] = SCALAR_METRICS) -> dict:
+        """Stacked (n_cells,) arrays of the scalar metrics + cell names."""
+        out = {"name": np.array(self.names)}
+        for k in keys:
+            out[k] = np.array([float(c[k]) for c in self.cells])
+        return out
+
+
+def make_cell(name: str, stack: StackConfig, specs: Sequence[WorkloadSpec],
+              n_req: int, seed: int = 0) -> SweepCell:
+    """Synthesise this cell's traces exactly as `analytic.run_config` does."""
+    traces = core_traces(seed, list(specs), n_req, stack.n_ranks,
+                         stack.banks_per_rank)
+    return SweepCell(name, stack, traces)
+
+
+def paper_grid(workloads: Sequence[tuple[str, Sequence[WorkloadSpec], int]],
+               layers: Sequence[int] = (4,), n_req: int = 500,
+               config_names: Sequence[str] | None = None) -> list[SweepCell]:
+    """The paper's evaluation grid: workloads x 5 IO models x layer counts.
+
+    workloads: (name, specs, seed) triples.  Cell names are
+    'L{layers}/{config}/{workload}'.
+    """
+    cells = []
+    for L in layers:
+        for cname, sc in paper_configs(L).items():
+            if config_names is not None and cname not in config_names:
+                continue
+            for wname, specs, seed in workloads:
+                cells.append(make_cell(f"L{L}/{cname}/{wname}", sc,
+                                       specs, n_req, seed))
+    return cells
+
+
+def run_sweep(spec: SweepSpec) -> SweepResult:
+    """Execute every cell, batching compatible cells into single vmapped
+    jit calls.  Metrics are bit-identical to per-cell `engine.simulate`."""
+    order: dict[tuple, list[int]] = {}
+    for i, cell in enumerate(spec.cells):
+        key = (cell.traces["inst"].shape[0], cell.stack.banks_per_rank)
+        order.setdefault(key, []).append(i)
+
+    results: list[dict | None] = [None] * len(spec.cells)
+    for (_, banks), idxs in order.items():
+        batch = [spec.cells[i] for i in idxs]
+        r_max = max(c.stack.n_ranks for c in batch)
+        plist = []
+        for c in batch:
+            p = c.stack.to_params(r_max)
+            p["n_req"] = np.int32(c.traces["inst"].shape[1])
+            plist.append(p)
+        params = {k: np.stack([p[k] for p in plist]) for k in plist[0]}
+        traces = stack_traces([c.traces for c in batch])
+        out = engine.batched_simulate(params, traces, spec.horizon,
+                                      spec.core, banks)
+        for j, i in enumerate(idxs):
+            results[i] = {k: np.asarray(v)[j] for k, v in out.items()}
+    return SweepResult(names=[c.name for c in spec.cells],
+                       cells=results)

@@ -83,6 +83,29 @@ def core_traces(seed: int, specs: list[WorkloadSpec], n_req: int,
     return {k: np.stack([t[k] for t in ts]) for k in ts[0]}
 
 
+def pad_traces(traces: dict, n_req_max: int) -> dict:
+    """Pad every (C, n_req) field to (C, n_req_max) along the request axis.
+
+    The engine reads requests only up to the cell's traced `n_req`, so the
+    pad values (edge-replicated) are never consumed.
+    """
+    n_req = traces["inst"].shape[1]
+    if n_req == n_req_max:
+        return traces
+    if n_req > n_req_max:
+        raise ValueError(f"trace has {n_req} requests > pad {n_req_max}")
+    pad = ((0, 0), (0, n_req_max - n_req))
+    return {k: np.pad(v, pad, mode="edge") for k, v in traces.items()}
+
+
+def stack_traces(trace_list: list[dict]) -> dict:
+    """Stack per-cell (C, n_req) trace dicts -> (N, C, n_req_max) arrays,
+    padding heterogeneous request counts to the longest."""
+    n_req_max = max(t["inst"].shape[1] for t in trace_list)
+    padded = [pad_traces(t, n_req_max) for t in trace_list]
+    return {k: np.stack([t[k] for t in padded]) for k in padded[0]}
+
+
 def lm_serving_trace(seed: int, n_req: int, n_ranks: int, n_banks: int,
                      kv_fraction: float = 0.7) -> dict:
     """A trace shaped like LM decode traffic: long sequential KV-cache

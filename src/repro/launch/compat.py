@@ -1,0 +1,200 @@
+"""Version-compat shim: the new-style mesh/sharding API on JAX 0.4.x.
+
+The codebase is written against the JAX >= 0.5 surface:
+
+    jax.make_mesh(shape, names, axis_types=...)
+    jax.set_mesh(mesh)                      # context manager
+    jax.shard_map(f, mesh=..., in_specs=..., out_specs=...)
+    jax.sharding.AxisType
+    jax.sharding.get_abstract_mesh()
+    jax.sharding.AbstractMesh(shape, names, axis_types=...)
+
+On JAX 0.4.x those names are missing (`get_abstract_mesh` lives in
+``jax._src.mesh``, ``shard_map`` in ``jax.experimental``, the mesh context
+is the legacy ``with mesh:`` resource env).  Importing this module installs
+equivalents onto ``jax`` / ``jax.sharding`` so every call site — including
+test snippets executed in subprocesses — works unchanged on either version.
+
+On new JAX the shim is a no-op passthrough.  Every mesh this repo builds is
+all-Auto, so on old JAX ``auto_axis_names`` reports every axis as Auto.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+
+import jax
+import jax.sharding as jsharding
+
+_HAS_NEW_API = hasattr(jsharding, "AxisType") and hasattr(jax, "set_mesh")
+
+
+if _HAS_NEW_API:
+    AxisType = jsharding.AxisType
+else:
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """jax.make_mesh that tolerates axis_types on 0.4.x (which predates it)."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if _HAS_NEW_API and axis_types is not None:
+        kwargs["axis_types"] = axis_types
+    return _real_make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def make_abstract_mesh(axis_sizes, axis_names, *, axis_types=None):
+    """AbstractMesh(shape, names) across versions (0.4.x wants pairs)."""
+    if _HAS_NEW_API:
+        return jsharding.AbstractMesh(tuple(axis_sizes), tuple(axis_names),
+                                      axis_types=axis_types)
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Activate `mesh` for sharding-constraint / abstract-mesh lookup."""
+    if _HAS_NEW_API:
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        # Legacy resource env: bare-PartitionSpec with_sharding_constraint
+        # and get_abstract_mesh both read thread_resources.
+        with mesh:
+            yield mesh
+
+
+def get_abstract_mesh():
+    """The active mesh, or an empty mesh when none is set.
+
+    On 0.4.x this is the concrete mesh from the legacy resource env — it
+    satisfies the same duck type (.empty/.axis_names/.shape) and, unlike a
+    wrapper, is directly usable as a shard_map mesh argument.
+    """
+    if _HAS_NEW_API:
+        return jsharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def auto_axis_names(mesh) -> set:
+    """Mesh axes of type Auto (shardable by the compiler).
+
+    All meshes built by this repo are all-Auto outside shard_map; on 0.4.x
+    (no per-axis types) an axis counts as Auto unless it is currently a
+    mapped (manual) axis in the trace's axis env — i.e. we are inside a
+    partial-manual shard_map region over it, where sharding constraints
+    must not mention it.
+    """
+    types = getattr(mesh, "axis_types", None)
+    if _HAS_NEW_API and types is not None:
+        return {a for a, t in zip(mesh.axis_names, types)
+                if t == AxisType.Auto}
+    from jax._src import core as _core
+    env = _core.get_axis_env()
+    return {a for a in mesh.axis_names if not env.axis_exists(a)}
+
+
+_real_shard_map = getattr(jax, "shard_map", None)
+
+
+# Partial-manual shard_map (manual 'pod', auto 'data'/'model') needs a newer
+# XLA: on 0.4.x the partitioner hits IsManualSubgroup checks in the model
+# body and lowers lax.axis_index to an unsupported PartitionId instruction.
+SUPPORTS_PARTIAL_MANUAL = _HAS_NEW_API
+
+
+def suppress_sharding_constraints(mesh) -> bool:
+    """True inside a partial-manual shard_map region on 0.4.x.
+
+    There, with_sharding_constraint over the remaining auto axes trips an
+    XLA SPMD check (``sharding.IsManualSubgroup()``; fixed in newer
+    releases), so constraints must be skipped and left to GSPMD inference.
+    """
+    if _HAS_NEW_API:
+        return False
+    from jax._src import core as _core
+    env = _core.get_axis_env()
+    return any(env.axis_exists(a) for a in mesh.axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    if _real_shard_map is not None:
+        return _real_shard_map(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    # Translate new-API kwargs: axis_names (manual axes) -> auto (its
+    # complement), check_vma -> check_rep.
+    axis_names = kwargs.pop("axis_names", None)
+    if axis_names is not None:
+        kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    if "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               **kwargs)
+
+
+def axis_size(axis_name):
+    """Static size of a named mapped axis (jax.lax.axis_size on >= 0.5)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    from jax._src import core as _core
+    return _core.axis_frame(axis_name)
+
+
+def _abstract_mesh_compat_class():
+    """A real AbstractMesh subclass accepting the new (shape, names)
+    constructor signature on 0.4.x — stays a type, so process-wide
+    ``isinstance(x, jax.sharding.AbstractMesh)`` checks keep working."""
+    from jax._src import mesh as mesh_lib
+
+    class AbstractMesh(mesh_lib.AbstractMesh):
+        def __init__(self, axis_sizes, axis_names=None, *, axis_types=None):
+            del axis_types               # 0.4.x has no per-axis types
+            if axis_names is None:       # old-style (name, size) pairs
+                super().__init__(axis_sizes)
+            else:
+                super().__init__(tuple(zip(axis_names, axis_sizes)))
+
+    return AbstractMesh
+
+
+_real_make_mesh = jax.make_mesh
+
+
+def _install_pallas_aliases() -> None:
+    """pltpu.CompilerParams was named TPUCompilerParams before jax 0.5."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:
+        return
+    if not hasattr(pltpu, "CompilerParams") and \
+            hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+def install() -> None:
+    """Patch the missing new-API names onto jax / jax.sharding (idempotent)."""
+    _install_pallas_aliases()
+    if _HAS_NEW_API:
+        return
+    jax.make_mesh = make_mesh
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not hasattr(jax.lax, "axis_size"):
+        from jax._src import core as _core
+        jax.lax.axis_size = _core.axis_frame
+    if not hasattr(jsharding, "AxisType"):
+        jsharding.AxisType = AxisType
+    if not hasattr(jsharding, "get_abstract_mesh"):
+        jsharding.get_abstract_mesh = get_abstract_mesh
+    jsharding.AbstractMesh = _abstract_mesh_compat_class()
+
+
+install()

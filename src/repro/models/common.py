@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.launch import compat
+
 Params = Any  # nested dict pytree of jnp arrays
 
 # ----------------------------------------------------------------------------
@@ -153,15 +155,15 @@ def filter_spec(spec: P, shape: tuple[int, ...]) -> P | None:
     production mesh) apply unchanged on smaller test meshes or no mesh.
     Returns None when there is no active mesh.
     """
-    am = jax.sharding.get_abstract_mesh()
+    am = compat.get_abstract_mesh()
     if am is None or am.empty:
+        return None
+    if compat.suppress_sharding_constraints(am):
         return None
     # Only constrain over Auto axes: inside a (partial-)manual shard_map
     # region the manual axes (e.g. 'pod' during hierarchical grad sync) must
     # not appear in sharding constraints.
-    types = dict(zip(am.axis_names, am.axis_types))
-    names = {a for a in am.axis_names
-             if types[a] == jax.sharding.AxisType.Auto}
+    names = compat.auto_axis_names(am)
     sizes = dict(am.shape)
     entries = list(spec) + [None] * (len(shape) - len(spec))
     out = []

@@ -5,8 +5,12 @@ import os
 import subprocess
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 import jax
 import pytest
+
+import repro.launch.compat  # noqa: F401  (installs new-API shims on JAX 0.4.x)
 
 
 @pytest.fixture(scope="session")
@@ -21,6 +25,8 @@ def run_subprocess_jax(code: str, n_devices: int = 8, timeout: int = 420):
                         + f" --xla_force_host_platform_device_count={n_devices}")
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src") \
         + os.pathsep + env.get("PYTHONPATH", "")
+    # Install the jax version-compat shims before the snippet touches jax.
+    code = "import repro.launch.compat  # noqa: F401\n" + code
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=timeout, env=env)
     assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"

@@ -1,11 +1,13 @@
 """Attention properties (hypothesis) + implementation equivalence sweeps."""
 import math
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev dependency")
+import hypothesis.strategies as st
 
 from repro.models import attention as A
 

@@ -1,8 +1,10 @@
 """SMLA simulator: paper Table 1/2 reproduction + dynamic invariants."""
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev dependency")
+import hypothesis.strategies as st
 
 from repro.core.smla import energy as E
 from repro.core.smla.analytic import compare_configs, table2, weighted_speedup

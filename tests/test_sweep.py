@@ -1,0 +1,120 @@
+"""Batched sweep engine: bit-exactness vs per-config simulate, padding
+edge cases, and compile-cache behaviour.  (No hypothesis dependency — this
+module must run in a bare environment.)"""
+import numpy as np
+import pytest
+
+from repro.core.smla import engine, sweep
+from repro.core.smla.analytic import compare_configs, run_config
+from repro.core.smla.config import paper_configs
+from repro.core.smla.traces import WORKLOADS, WorkloadSpec
+
+HORIZON = 6_000
+N_REQ = 120
+SPECS = [WORKLOADS[4], WORKLOADS[20]]
+
+
+def _assert_cell_equal(name, got, ref):
+    assert set(got) == set(ref), name
+    for k in ref:
+        a, b = np.asarray(got[k]), np.asarray(ref[k])
+        assert a.shape == b.shape, (name, k)
+        assert np.array_equal(a, b), (name, k, a, b)
+
+
+def test_sweep_matches_simulate_all_models_and_layers():
+    """All five IO models x 2/4/8 layers in ONE batch (rank counts 1..8
+    padded to 8) must reproduce per-config simulate() bit-for-bit."""
+    cells = []
+    for L in (2, 4, 8):
+        for name, sc in paper_configs(L).items():
+            cells.append(sweep.make_cell(f"L{L}/{name}", sc, SPECS,
+                                         N_REQ, seed=3))
+    ranks = {c.stack.n_ranks for c in cells}
+    assert min(ranks) == 1 and max(ranks) == 8       # mixed-rank batch
+    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), HORIZON))
+    for cell, got in zip(cells, res.cells):
+        ref = engine.simulate(cell.stack, cell.traces, HORIZON)
+        _assert_cell_equal(cell.name, got, ref)
+
+
+def test_sweep_pads_mixed_request_counts():
+    """Cells with different trace lengths share one batch; the padded tail
+    must never leak into the metrics."""
+    cfgs = paper_configs(4)
+    short = sweep.make_cell("short", cfgs["dedicated_mlr"], SPECS, 60, seed=1)
+    long_ = sweep.make_cell("long", cfgs["baseline"], SPECS, N_REQ, seed=2)
+    res = sweep.run_sweep(sweep.SweepSpec((short, long_), HORIZON))
+    for cell in (short, long_):
+        ref = engine.simulate(cell.stack, cell.traces, HORIZON)
+        _assert_cell_equal(cell.name, res[cell.name], ref)
+
+
+def test_sweep_groups_by_core_count():
+    """Different core counts can't share a batch; both still come back in
+    cell order."""
+    cfgs = paper_configs(4)
+    one = sweep.make_cell("one", cfgs["baseline"], [WORKLOADS[0]],
+                          N_REQ, seed=0)
+    two = sweep.make_cell("two", cfgs["baseline"], SPECS, N_REQ, seed=0)
+    res = sweep.run_sweep(sweep.SweepSpec((one, two, one), HORIZON))
+    assert res.names == ["one", "two", "one"]
+    assert res.cells[0]["ipc"].shape == (1,)
+    assert res.cells[1]["ipc"].shape == (2,)
+    _assert_cell_equal("one", res.cells[0], res.cells[2])
+
+
+def test_compile_cache_reuse():
+    """Repeating a sweep with identical static shapes must not recompile."""
+    cells = tuple(sweep.make_cell(n, sc, SPECS, N_REQ, seed=5)
+                  for n, sc in paper_configs(4).items())
+    spec = sweep.SweepSpec(cells, HORIZON)
+    sweep.run_sweep(spec)                            # warm (may compile)
+    before = engine.compile_count()
+    sweep.run_sweep(spec)
+    sweep.run_sweep(sweep.SweepSpec(cells, HORIZON))
+    assert engine.compile_count() == before
+
+
+def test_scalars_structured_output():
+    cells = tuple(sweep.make_cell(n, sc, SPECS, N_REQ, seed=5)
+                  for n, sc in paper_configs(4).items())
+    res = sweep.run_sweep(sweep.SweepSpec(cells, HORIZON))
+    tab = res.scalars()
+    assert list(tab["name"]) == list(res.names)
+    for k in sweep.SCALAR_METRICS:
+        assert tab[k].shape == (len(cells),)
+        assert np.isfinite(tab[k]).all(), k
+    assert (tab["bandwidth_gbps"] >= 0).all()
+
+
+def test_compare_configs_matches_run_config():
+    """The batched analytic path equals the per-config path exactly."""
+    res = compare_configs(SPECS, n_req=N_REQ, horizon=HORIZON, seed=9)
+    for name, sc in paper_configs(4).items():
+        ref = run_config(sc, SPECS, n_req=N_REQ, horizon=HORIZON, seed=9)
+        got = res[name]
+        assert np.array_equal(got.ipc, ref.ipc), name
+        assert got.bandwidth == ref.bandwidth, name
+        assert got.energy_nj == pytest.approx(ref.energy_nj), name
+
+
+def test_to_params_padding_never_referenced():
+    """Padded params must not change a single-cell simulation."""
+    sc = paper_configs(4)["cascaded_mlr"]            # n_ranks == 1
+    cell = sweep.make_cell("mlr", sc, SPECS, N_REQ, seed=11)
+    ref = engine.simulate(sc, cell.traces, HORIZON)
+    padded = sc.to_params(8)
+    padded["n_req"] = np.int32(N_REQ)
+    batch_params = {k: np.stack([v]) for k, v in padded.items()}
+    batch_traces = {k: np.stack([v]) for k, v in cell.traces.items()}
+    out = engine.batched_simulate(batch_params, batch_traces, HORIZON,
+                                  engine.CoreParams(), sc.banks_per_rank)
+    got = {k: np.asarray(v)[0] for k, v in out.items()}
+    _assert_cell_equal("mlr-padded", got, ref)
+
+
+def test_to_params_rejects_too_small_pad():
+    sc = paper_configs(4)["baseline"]                # n_ranks == 4
+    with pytest.raises(ValueError):
+        sc.to_params(2)
