@@ -67,14 +67,23 @@ def run(n_req: int = 600, horizon: int = 80_000) -> list[str]:
                 f"{gm(per['e_dio']):.3f},{gm(per['e_cio']):.3f}")
     rows.append("# paper (SPEC/TPC/STREAM): SLR +19.2% DIO / +23.9% CIO; "
                 "MLR +8.8%; energy +8.6%/+4.6% (single-core)")
+    # write / refresh / power-down residency over the whole grid (the
+    # energy relatives above already price these via the measured metrics)
+    scal = res.scalars()
+    rows.append(f"# traffic: {int(scal['n_wr'].sum())} writes retired, "
+                f"mean pd_frac {float(scal['pd_frac'].mean()):.3f}, "
+                f"{int(scal['refresh_cycles'].sum())} refresh cycles")
     rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
                 f"{wall:.1f}s wall")
     emit_json("fig11", {
         "n_req": n_req, "horizon": horizon, "n_cells": len(cells),
         "compiles": compiles, "wall_s": round(wall, 2),
         "geomean": {k: gm(v) for k, v in per.items()},
+        "total_n_wr": int(scal["n_wr"].sum()),
+        "mean_pd_frac": float(scal["pd_frac"].mean()),
+        "total_refresh_cycles": int(scal["refresh_cycles"].sum()),
         "rows": table,
-        "scalars": {k: v for k, v in res.scalars().items() if k != "name"},
+        "scalars": {k: v for k, v in scal.items() if k != "name"},
         "cell_names": list(res.names),
     })
     return rows

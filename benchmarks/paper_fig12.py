@@ -55,10 +55,11 @@ def run(n_mixes: int = 6, n_req: int = 500, horizon: int = 80_000,
     assert np.array_equal(np.asarray(ref["ipc"]), res[probe.name]["ipc"]), \
         "sweep metrics diverge from per-config simulate()"
 
-    rows = ["cores,config,ws_vs_baseline,energy_vs_baseline"]
+    rows = ["cores,config,ws_vs_baseline,energy_vs_baseline,"
+            "pd_frac,wr_share"]
     table = []
     for cores in CORES:
-        acc = {k: ([], []) for k in SMLA}
+        acc = {k: ([], [], [], []) for k in SMLA}
         for m in range(n_mixes):
             base = res[f"c{cores}/m{m}/baseline"]
             base_e = energy_from_metrics(cfgs["baseline"], base).total_nj
@@ -68,11 +69,18 @@ def run(n_mixes: int = 6, n_req: int = 500, horizon: int = 80_000,
                     mm["ipc"] / np.maximum(base["ipc"], 1e-9))))
                 acc[k][1].append(
                     energy_from_metrics(cfgs[k], mm).total_nj / base_e)
-        for k, (ws, en) in acc.items():
-            rows.append(f"{cores},{k},{np.mean(ws):.3f},{np.mean(en):.3f}")
+                acc[k][2].append(float(mm["pd_frac"]))
+                acc[k][3].append(int(mm["n_wr"])
+                                 / max(int(np.asarray(mm["served"]).sum()),
+                                       1))
+        for k, (ws, en, pd, wshare) in acc.items():
+            rows.append(f"{cores},{k},{np.mean(ws):.3f},{np.mean(en):.3f},"
+                        f"{np.mean(pd):.3f},{np.mean(wshare):.3f}")
             table.append(dict(cores=cores, config=k,
                               ws=float(np.mean(ws)),
-                              energy=float(np.mean(en))))
+                              energy=float(np.mean(en)),
+                              pd_frac=float(np.mean(pd)),
+                              wr_share=float(np.mean(wshare))))
     rows.append("# paper: 16-core SLR ws +50.4% DIO / +55.8% CIO; "
                 "energy -17.9% (CIO SLR); MLR below SLR")
     rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "

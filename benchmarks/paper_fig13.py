@@ -44,10 +44,10 @@ def run(n_mixes: int = 4, n_req: int = 500, horizon: int = 80_000,
     assert compiles <= len(LAYERS), \
         f"fig13 grid took {compiles} compiles (want <= {len(LAYERS)})"
 
-    rows = ["layers,config,ws_vs_baseline,energy_vs_baseline"]
+    rows = ["layers,config,ws_vs_baseline,energy_vs_baseline,pd_frac"]
     table = []
     for layers in LAYERS:
-        acc = {k: ([], []) for k in SMLA}
+        acc = {k: ([], [], []) for k in SMLA}
         for m in range(n_mixes):
             base = res[f"L{layers}/m{m}/baseline"]
             base_e = energy_from_metrics(
@@ -59,11 +59,14 @@ def run(n_mixes: int = 4, n_req: int = 500, horizon: int = 80_000,
                     mm["ipc"] / np.maximum(base["ipc"], 1e-9))))
                 acc[k][1].append(
                     energy_from_metrics(cfg_of[name], mm).total_nj / base_e)
-        for k, (ws, en) in acc.items():
-            rows.append(f"{layers},{k},{np.mean(ws):.3f},{np.mean(en):.3f}")
+                acc[k][2].append(float(mm["pd_frac"]))
+        for k, (ws, en, pd) in acc.items():
+            rows.append(f"{layers},{k},{np.mean(ws):.3f},{np.mean(en):.3f},"
+                        f"{np.mean(pd):.3f}")
             table.append(dict(layers=layers, config=k,
                               ws=float(np.mean(ws)),
-                              energy=float(np.mean(en))))
+                              energy=float(np.mean(en)),
+                              pd_frac=float(np.mean(pd))))
     rows.append("# paper: benefits grow with layer count under SLR; "
                 "8-layer DIO edges CIO (upper-layer command bandwidth)")
     rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "

@@ -38,17 +38,25 @@ class RunResult:
     standby_nj: float
     ops_nj: float
     bus_util: float
+    n_wr: int = 0
+    pd_frac: float = 0.0
+    refresh_cycles: int = 0
 
 
 def _to_run_result(stack: StackConfig, m: dict) -> RunResult:
     # fixed work -> energy over the makespan (same requests served by
-    # every config; the paper compares energy per application execution)
+    # every config; the paper compares energy per application execution).
+    # Write count and power-down residency are the engine's measured
+    # values — energy_from_metrics prices them via Table 1.
     eb = energy_mod.energy_from_metrics(stack, m)
     return RunResult(
         name="", ipc=np.asarray(m["ipc"]),
         bandwidth=float(m["bandwidth_gbps"]),
         energy_nj=eb.total_nj, standby_nj=eb.standby_nj, ops_nj=eb.ops_nj,
-        bus_util=float(np.clip(np.asarray(m["bus_util"]), 0.0, 1.0)))
+        bus_util=float(np.clip(np.asarray(m["bus_util"]), 0.0, 1.0)),
+        n_wr=int(np.asarray(m.get("n_wr", 0))),
+        pd_frac=float(np.asarray(m.get("pd_frac", 0.0))),
+        refresh_cycles=int(np.asarray(m.get("refresh_cycles", 0))))
 
 
 def run_config(stack: StackConfig, specs: Sequence[WorkloadSpec],

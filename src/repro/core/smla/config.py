@@ -41,6 +41,20 @@ class StackConfig:
     t_rcd_ns: float = 13.75
     t_rp_ns: float = 13.75
     t_cl_ns: float = 13.75
+    # Write path (JEDEC Wide-IO / LPDDR2-class values): write recovery keeps
+    # the bank busy after the last data beat; write-to-read turnaround blocks
+    # the next read start on the same bus group.
+    t_wr_ns: float = 15.0
+    t_wtr_ns: float = 7.5
+    # Refresh: one all-bank refresh per rank every tREFI, occupying the rank
+    # for tRFC and closing its rows.  `refresh=False` disables it exactly
+    # (every refresh code path in the engine becomes a no-op).
+    refresh: bool = True
+    t_refi_ns: float = 7800.0       # 64 ms / 8192 rows
+    t_rfc_ns: float = 130.0         # Wide-IO 1Gb-class all-bank refresh
+    # Power-down: a rank with no open activity for `pd_idle_ns` is counted
+    # in power-down (Table 1's 0.24 mA state) until its next use.
+    pd_idle_ns: float = 30.0
     vdd: float = 1.2
 
     # ---- derived quantities -------------------------------------------------
@@ -152,6 +166,11 @@ class StackConfig:
             "t_rcd": np.int32(self.t_rcd),
             "t_rp": np.int32(self.t_rp),
             "t_cl": np.int32(self.t_cl),
+            "t_wr": np.int32(self.t_wr),
+            "t_wtr": np.int32(self.t_wtr),
+            "t_refi": np.int32(self.t_refi),
+            "t_rfc": np.int32(self.t_rfc),
+            "t_pd": np.int32(self.t_pd),
             "layers": np.int32(self.layers),
             "n_ranks": np.int32(R),
             "n_groups": np.int32(n_groups),
@@ -173,6 +192,27 @@ class StackConfig:
     @property
     def t_cl(self) -> int:
         return self.ns_to_cycles(self.t_cl_ns)
+
+    @property
+    def t_wr(self) -> int:
+        return self.ns_to_cycles(self.t_wr_ns)
+
+    @property
+    def t_wtr(self) -> int:
+        return self.ns_to_cycles(self.t_wtr_ns)
+
+    @property
+    def t_refi(self) -> int:
+        """Refresh interval in fast cycles; 0 means refresh disabled."""
+        return self.ns_to_cycles(self.t_refi_ns) if self.refresh else 0
+
+    @property
+    def t_rfc(self) -> int:
+        return self.ns_to_cycles(self.t_rfc_ns)
+
+    @property
+    def t_pd(self) -> int:
+        return self.ns_to_cycles(self.pd_idle_ns)
 
 
 # The paper's evaluated configurations (Table 2), as a registry.

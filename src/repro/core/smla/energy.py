@@ -74,33 +74,51 @@ class EnergyBreakdown:
 
 
 def energy_from_metrics(stack: StackConfig, metrics: dict,
-                        n_wr: int = 0) -> EnergyBreakdown:
+                        n_wr: int | None = None,
+                        pd_frac: float | None = None) -> EnergyBreakdown:
     """EnergyBreakdown for one simulated cell's metrics dict (engine or
     sweep output): energy over the fixed-work makespan, with the measured
-    bus utilisation splitting active- vs precharge-standby."""
+    bus utilisation splitting active- vs precharge-standby, the measured
+    write count pricing E_WR vs E_RD, and the measured power-down residency
+    pricing the 0.24 mA power-down state.  The explicit `n_wr` / `pd_frac`
+    arguments exist only to override the metrics (e.g. what-if analyses);
+    by default both come out of the simulation."""
     act_frac = float(np.clip(np.asarray(metrics["bus_util"]), 0.0, 1.0))
+    if n_wr is None:
+        n_wr = int(np.asarray(metrics.get("n_wr", 0)))
+    if pd_frac is None:
+        pd_frac = float(np.asarray(metrics.get("pd_frac", 0.0)))
+    n_served = int(np.asarray(metrics["served"]).sum())
     return stack_energy(stack, float(metrics["makespan_ns"]),
                         int(metrics["n_act"]),
-                        int(np.asarray(metrics["served"]).sum()),
-                        act_frac, n_wr)
+                        n_served - n_wr,
+                        act_frac, n_wr, pd_frac=pd_frac)
 
 
 def stack_energy(stack: StackConfig, horizon_ns: float, n_act: int,
                  n_rd: int, active_frac: float, n_wr: int = 0,
+                 pd_frac: float = 0.0,
                  vdd: float | None = None) -> EnergyBreakdown:
     """Total stack energy over a simulated window.
 
-    standby: per-layer clock-coupled current at that layer's frequency,
-    split between active- and precharge-standby by `active_frac` (measured
-    bus/bank utilisation).  ops: frequency-decoupled ACT/RD/WR energy —
-    identical across IO models, as the paper observes (§8.4).
+    standby: per-layer clock-coupled current at that layer's frequency.
+    `pd_frac` of the window (the engine's measured power-down rank
+    residency) draws the Table-1 power-down current; the remainder splits
+    between active- and precharge-standby by `active_frac` (measured bus
+    utilisation, capped at the non-powered-down share).  ops:
+    frequency-decoupled ACT/RD/WR energy — identical across IO models, as
+    the paper observes (§8.4).
     """
     v = stack.vdd if vdd is None else vdd
+    pd = float(np.clip(pd_frac, 0.0, 1.0))
+    act = min(float(np.clip(active_frac, 0.0, 1.0)), 1.0 - pd)
+    pre = max(1.0 - pd - act, 0.0)
     standby = 0.0
     for layer in range(stack.layers):
         f = stack.layer_freq_mhz(layer)
-        i_ma = (active_frac * standby_current_ma(f, True)
-                + (1 - active_frac) * standby_current_ma(f, False))
+        i_ma = (pd * PD_MA
+                + act * standby_current_ma(f, True)
+                + pre * standby_current_ma(f, False))
         standby += i_ma * v * horizon_ns * 1e-3          # pJ -> nJ
     ops = (n_act * act_pre_energy_nj(stack.base_freq_mhz)
            + n_rd * E_RD_NJ + n_wr * E_WR_NJ)

@@ -7,6 +7,19 @@ Time unit: one *fast cycle* = 1 / (L * F)  (1.25 ns for the paper's 4-layer,
 Modelled per channel:
 * banks: open row + busy-until, tRP/tRCD/tCL from StackConfig,
 * FR-FCFS controller (row hits first, then oldest; one command per cycle),
+* writes: per-request `wr` trace bit; a write's data transfer extends its
+  bank by tWR (write recovery) and blocks the next *read* start on the same
+  bus group for tWTR (write-to-read turnaround).  Write bus occupancy is
+  accounted separately (`wr_bus_cycles`).
+* refresh: per-rank tREFI counter; when due, new CAS issue to that rank is
+  blocked until its banks drain, then the rank refreshes for tRFC (rows
+  close, transfers of that rank stall).  tREFI == 0 disables refresh — every
+  refresh code path is then an exact no-op.
+* power-down: a rank idle (no busy bank, no queued request) for t_pd
+  consecutive cycles is counted in power-down; `pd_cycles` accumulates
+  rank-cycles in that state while work remains, so `energy.stack_energy`
+  can price Table 1's 0.24 mA power-down current with a *measured*
+  residency instead of an assumed one.
 * IO models (paper §4/§5):
     BASELINE        one full-width bus, one rank at a time, 4L cycles/req
     DEDICATED MLR   full-width transfer at L*F: L cycles/req (5 ns)
@@ -17,14 +30,15 @@ Modelled per channel:
   the paper's Table-3 core model.  IPC is measured in core cycles.
 
 Every per-config quantity the step function needs — timing vector
-(tRCD/tRP/tCL), per-rank transfer durations, bus-group map, slotted flag,
-layer count, actual rank/request counts — is a *traced* input (see
-``StackConfig.to_params``), not a Python closure constant.  Only array
-shapes are static, so one jitted program serves every configuration with
-the same padded shapes, and ``sweep.run_sweep`` can vmap it over a stacked
-(config, workload) cell axis.  Compiled executables are cached per static
-signature; ``compile_count()`` exposes the number of distinct compiles for
-benchmark assertions.
+(tRCD/tRP/tCL/tWR/tWTR/tREFI/tRFC/t_pd), per-rank transfer durations,
+bus-group map, slotted flag, layer count, actual rank/request counts — is a
+*traced* input (see ``StackConfig.to_params``), not a Python closure
+constant.  Only array shapes are static, so one jitted program serves every
+configuration with the same padded shapes, and ``sweep.run_sweep`` can vmap
+it over a stacked (config, workload) cell axis.  Compiled executables are
+cached per static signature; ``compile_count()`` exposes the number of
+distinct compiles for benchmark assertions and ``reset_compile_count()``
+rebases it (tests assert on deltas, never absolutes).
 """
 from __future__ import annotations
 
@@ -61,20 +75,55 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
     n_req = params["n_req"]
     L = params["layers"]
     t_rcd, t_rp, t_cl = params["t_rcd"], params["t_rp"], params["t_cl"]
+    t_wr, t_wtr = params["t_wr"], params["t_wtr"]
+    t_refi, t_rfc, t_pd = params["t_refi"], params["t_rfc"], params["t_pd"]
+    refresh_en = t_refi > 0
     dur = params["dur"]
     group_of_rank = params["group_of_rank"]
     slotted = params["slotted"]
+    real_rank = jnp.arange(R, dtype=jnp.int32) < params["n_ranks"]
 
     tr_inst = traces["inst"].astype(jnp.float32)
     tr_rank = traces["rank"].astype(jnp.int32) % params["n_ranks"]
     tr_bank = traces["bank"].astype(jnp.int32) % B
     tr_row = traces["row"].astype(jnp.int32)
+    tr_wr = traces["wr"].astype(jnp.int32) != 0
 
     def step(st, t):
-        (qv, qc, qr, qb, qrow, qinst, qarr, qphase, qready, qdone,
-         bank_busy, bank_row, grp_busy, c_inst, c_next, c_out,
-         served, c_finish, n_act, n_conflict, bus_cycles) = st
         t = t.astype(jnp.int32)
+        qv, qc, qr, qb = st["qv"], st["qc"], st["qr"], st["qb"]
+        qrow, qinst, qarr = st["qrow"], st["qinst"], st["qarr"]
+        qphase, qready, qdone, qwr = (st["qphase"], st["qready"],
+                                      st["qdone"], st["qwr"])
+        bank_busy, bank_row = st["bank_busy"], st["bank_row"]
+        grp_busy, grp_wr_until = st["grp_busy"], st["grp_wr_until"]
+        ref_next, ref_until = st["ref_next"], st["ref_until"]
+        idle_since = st["idle_since"]
+        c_inst, c_next, c_out = st["c_inst"], st["c_next"], st["c_out"]
+        served, c_finish = st["served"], st["c_finish"]
+
+        # counters accumulated only while work remains, so fixed-work
+        # metrics (refresh/power-down residency) cover the makespan, not
+        # the idle tail of the scan horizon.
+        work_left = (served < n_req).any()
+
+        # ---- 0. refresh (before issue: a started refresh blocks the rank)
+        # A due rank waits until it has no busy bank AND no issued/granted
+        # request in flight (phase >= 2): refresh must not close a row
+        # under an already-CAS'd request or start mid-data-burst.  New CAS
+        # issue is blocked below while due, so the rank drains in bounded
+        # time.
+        ref_due = refresh_en & (t >= ref_next) & real_rank
+        bank_idle = (bank_busy <= t).all(axis=1)
+        in_flight = jax.ops.segment_sum(
+            jnp.where(qv & (qphase >= 2), 1, 0), qr, num_segments=R) > 0
+        ref_start = ref_due & bank_idle & ~in_flight
+        bank_busy = jnp.where(ref_start[:, None], t + t_rfc, bank_busy)
+        bank_row = jnp.where(ref_start[:, None], -1, bank_row)  # rows close
+        ref_until = jnp.where(ref_start, t + t_rfc, ref_until)
+        ref_next = jnp.where(ref_start, ref_next + t_refi, ref_next)
+        st["refresh_cycles"] = st["refresh_cycles"] + jnp.where(
+            work_left, ref_start.sum() * t_rfc, 0)
 
         # ---- 1. enqueue (round-robin one core per cycle) ----------------
         cid = t % n_cores
@@ -100,12 +149,16 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         qarr = qarr.at[free_slot].set(jnp.where(do_enq, t, qarr[free_slot]))
         qphase = qphase.at[free_slot].set(
             jnp.where(do_enq, 1, qphase[free_slot]))
+        qwr = qwr.at[free_slot].set(
+            jnp.where(do_enq, tr_wr[cid, idx], qwr[free_slot]))
         c_next = c_next.at[cid].add(jnp.where(do_enq, 1, 0))
         c_out = c_out.at[cid].add(jnp.where(do_enq, 1, 0))
 
         # ---- 2. FR-FCFS issue (one command per cycle) --------------------
+        # A rank with refresh due accepts no new CAS, so its banks drain
+        # and the pending refresh starts within bounded time.
         b_busy = bank_busy[qr, qb] <= t
-        cand = qv & (qphase == 1) & b_busy
+        cand = qv & (qphase == 1) & b_busy & ~ref_due[qr]
         open_row = bank_row[qr, qb]
         hit = open_row == qrow
         closed = open_row < 0
@@ -126,8 +179,8 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         qphase = qphase.at[pick].set(jnp.where(can_issue, 2, qphase[pick]))
         qready = qready.at[pick].set(jnp.where(can_issue, ready,
                                                qready[pick]))
-        n_act = n_act + jnp.where(can_issue & ~hit[pick], 1, 0)
-        n_conflict = n_conflict + jnp.where(
+        st["n_act"] = st["n_act"] + jnp.where(can_issue & ~hit[pick], 1, 0)
+        st["n_conflict"] = st["n_conflict"] + jnp.where(
             can_issue & ~hit[pick] & ~closed[pick], 1, 0)
 
         # ---- 3. bus grant (one start per group per cycle) ----------------
@@ -135,20 +188,42 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         # group_of_rank, so the extra iterations are exact no-ops.
         qphase = jnp.where(qv & (qphase == 2) & (qready <= t), 3, qphase)
         slot_match = (t % L) == (qr % L)
+        n_grants, n_slot_grants = st["n_grants"], st["n_slot_grants"]
+        bus_cycles, wr_bus_cycles = st["bus_cycles"], st["wr_bus_cycles"]
         for g in range(R):
             in_g = group_of_rank[qr] == g
             cand3 = qv & (qphase == 3) & in_g
             # slotted (cascaded SLR): rank may start only in its time slot
             cand3 = cand3 & (~slotted | slot_match)
+            # reads wait out the group's write-to-read turnaround window;
+            # a refreshing rank transfers nothing until tRFC elapses.
+            cand3 = cand3 & (qwr | (grp_wr_until[g] <= t))
+            cand3 = cand3 & (ref_until[qr] <= t)
             cand3 = cand3 & (grp_busy[g] <= t)
             score3 = jnp.where(cand3, -qarr, -BIG)
             p3 = jnp.argmax(score3)
             go = cand3[p3]
             d = dur[qr[p3]]
+            go_wr = go & qwr[p3]
             grp_busy = grp_busy.at[g].set(jnp.where(go, t + d, grp_busy[g]))
             qphase = qphase.at[p3].set(jnp.where(go, 4, qphase[p3]))
             qdone = qdone.at[p3].set(jnp.where(go, t + d, qdone[p3]))
+            # write recovery: the bank stays busy tWR past the last beat;
+            # write-to-read turnaround arms the group's read blocker.
+            r3, b3 = qr[p3], qb[p3]
+            bank_busy = bank_busy.at[r3, b3].set(
+                jnp.where(go_wr,
+                          jnp.maximum(bank_busy[r3, b3], t + d + t_wr),
+                          bank_busy[r3, b3]))
+            grp_wr_until = grp_wr_until.at[g].set(
+                jnp.where(go_wr, t + d + t_wtr, grp_wr_until[g]))
             bus_cycles = bus_cycles + jnp.where(go, d, 0)
+            wr_bus_cycles = wr_bus_cycles + jnp.where(go_wr, d, 0)
+            n_grants = n_grants + jnp.where(go, 1, 0)
+            n_slot_grants = n_slot_grants + jnp.where(go & slot_match[p3],
+                                                      1, 0)
+        st["bus_cycles"], st["wr_bus_cycles"] = bus_cycles, wr_bus_cycles
+        st["n_grants"], st["n_slot_grants"] = n_grants, n_slot_grants
 
         # ---- 4. retire ----------------------------------------------------
         fin = qv & (qphase == 4) & (qdone <= t)
@@ -158,6 +233,7 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
             jnp.where(fin, t, -1), qc, num_segments=n_cores))
         c_out = c_out - jax.ops.segment_sum(
             jnp.where(fin, 1, 0), qc, num_segments=n_cores)
+        st["n_wr"] = st["n_wr"] + jnp.where(fin & qwr, 1, 0).sum()
         qv = qv & ~fin
         qphase = jnp.where(fin, 0, qphase)
 
@@ -175,28 +251,59 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
             c_inst + jnp.where(window_ok, core.inst_per_fast_cycle, 0.0),
             nxt_inst)
 
-        return (qv, qc, qr, qb, qrow, qinst, qarr, qphase, qready, qdone,
-                bank_busy, bank_row, grp_busy, c_inst, c_next, c_out,
-                served, c_finish, n_act, n_conflict, bus_cycles), None
+        # ---- 6. power-down residency --------------------------------------
+        # a real rank with no busy bank and no queued request is idle; after
+        # t_pd consecutive idle cycles it is counted in power-down.
+        pending = jax.ops.segment_sum(jnp.where(qv, 1, 0), qr,
+                                      num_segments=R) > 0
+        rank_idle = (bank_busy <= t).all(axis=1) & ~pending & real_rank
+        idle_since = jnp.where(rank_idle, idle_since, t + 1)
+        in_pd = rank_idle & ((t - idle_since) >= t_pd)
+        st["pd_cycles"] = st["pd_cycles"] + jnp.where(
+            work_left, in_pd.sum(), 0)
 
-    st = (jnp.zeros(Q_SIZE, bool), jnp.zeros(Q_SIZE, jnp.int32),
-          jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
-          jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.float32),
-          jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
-          jnp.zeros(Q_SIZE, jnp.int32), jnp.zeros(Q_SIZE, jnp.int32),
-          jnp.zeros((R, B), jnp.int32),
-          -jnp.ones((R, B), jnp.int32),
-          jnp.zeros(R, jnp.int32),
-          jnp.zeros(n_cores, jnp.float32),
-          jnp.zeros(n_cores, jnp.int32), jnp.zeros(n_cores, jnp.int32),
-          jnp.zeros(n_cores, jnp.int32),
-          jnp.zeros(n_cores, jnp.int32),
-          jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
-          jnp.zeros((), jnp.int32))
+        st.update(qv=qv, qc=qc, qr=qr, qb=qb, qrow=qrow, qinst=qinst,
+                  qarr=qarr, qphase=qphase, qready=qready, qdone=qdone,
+                  qwr=qwr, bank_busy=bank_busy, bank_row=bank_row,
+                  grp_busy=grp_busy, grp_wr_until=grp_wr_until,
+                  ref_next=ref_next, ref_until=ref_until,
+                  idle_since=idle_since, c_inst=c_inst, c_next=c_next,
+                  c_out=c_out, served=served, c_finish=c_finish)
+        return st, None
+
+    i32 = jnp.int32
+    st = dict(
+        qv=jnp.zeros(Q_SIZE, bool), qc=jnp.zeros(Q_SIZE, i32),
+        qr=jnp.zeros(Q_SIZE, i32), qb=jnp.zeros(Q_SIZE, i32),
+        qrow=jnp.zeros(Q_SIZE, i32), qinst=jnp.zeros(Q_SIZE, jnp.float32),
+        qarr=jnp.zeros(Q_SIZE, i32), qphase=jnp.zeros(Q_SIZE, i32),
+        qready=jnp.zeros(Q_SIZE, i32), qdone=jnp.zeros(Q_SIZE, i32),
+        qwr=jnp.zeros(Q_SIZE, bool),
+        bank_busy=jnp.zeros((R, B), i32),
+        bank_row=-jnp.ones((R, B), i32),
+        grp_busy=jnp.zeros(R, i32),
+        grp_wr_until=jnp.zeros(R, i32),
+        # stagger refresh across ranks (rank r's first tREFI deadline at
+        # (r+1)/n_ranks of the interval) — synchronized deadlines would
+        # black out the whole channel every tREFI, which real controllers
+        # avoid; padded ranks are gated by real_rank regardless.
+        ref_next=(t_refi * (jnp.arange(R, dtype=i32)
+                            % jnp.maximum(params["n_ranks"], 1) + 1)
+                  // jnp.maximum(params["n_ranks"], 1)).astype(i32),
+        ref_until=jnp.zeros(R, i32),
+        idle_since=jnp.zeros(R, i32),
+        c_inst=jnp.zeros(n_cores, jnp.float32),
+        c_next=jnp.zeros(n_cores, i32), c_out=jnp.zeros(n_cores, i32),
+        served=jnp.zeros(n_cores, i32), c_finish=jnp.zeros(n_cores, i32),
+        n_act=jnp.zeros((), i32), n_conflict=jnp.zeros((), i32),
+        bus_cycles=jnp.zeros((), i32), wr_bus_cycles=jnp.zeros((), i32),
+        n_wr=jnp.zeros((), i32), refresh_cycles=jnp.zeros((), i32),
+        pd_cycles=jnp.zeros((), i32),
+        n_grants=jnp.zeros((), i32), n_slot_grants=jnp.zeros((), i32),
+    )
     final, _ = jax.lax.scan(step, st, jnp.arange(horizon))
-    (qv, qc, qr, qb, qrow, qinst, qarr, qphase, qready, qdone,
-     bank_busy, bank_row, grp_busy, c_inst, c_next, c_out,
-     served, c_finish, n_act, n_conflict, bus_cycles) = final
+    served, c_finish, c_inst = (final["served"], final["c_finish"],
+                                final["c_inst"])
 
     unit_ns = params["unit_ns"]
     t_ns = horizon * unit_ns
@@ -209,15 +316,28 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
     makespan_ns = jnp.max(jnp.where(complete, finish_ns, t_ns))
     bw = (served.sum() * params["request_bytes"]
           / makespan_ns)                             # GB/s over work
+    makespan_cycles = makespan_ns / unit_ns
+    n_ranks_f = params["n_ranks"].astype(jnp.float32)
     return {
         "ipc": ipc,
         "served": served,
         "complete": complete,
         "bandwidth_gbps": bw,
-        "n_act": n_act,
-        "n_row_conflicts": n_conflict,
-        "bus_util": bus_cycles / jnp.maximum(
-            (makespan_ns / unit_ns)
+        "n_act": final["n_act"],
+        "n_row_conflicts": final["n_conflict"],
+        "n_wr": final["n_wr"],
+        "bus_cycles": final["bus_cycles"],
+        "wr_bus_cycles": final["wr_bus_cycles"],
+        "refresh_cycles": final["refresh_cycles"],
+        "pd_cycles": final["pd_cycles"],
+        "pd_frac": (final["pd_cycles"].astype(jnp.float32)
+                    / jnp.maximum(makespan_cycles * n_ranks_f, 1.0)),
+        "n_grants": final["n_grants"],
+        "n_slot_grants": final["n_slot_grants"],
+        "n_enqueued": final["c_next"].sum(),
+        "n_outstanding": jnp.where(final["qv"], 1, 0).sum(),
+        "bus_util": final["bus_cycles"] / jnp.maximum(
+            makespan_cycles
             * jnp.maximum(params["n_groups"], 1).astype(jnp.float32), 1),
         "horizon_ns": jnp.asarray(t_ns, jnp.float32),
         "makespan_ns": makespan_ns,
@@ -231,10 +351,47 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
 
 _COMPILE_COUNT = [0]
 
+#: params every trace/param dict must carry; used to default legacy inputs.
+_TIMING_DEFAULTS = ("t_wr", "t_wtr", "t_refi", "t_rfc", "t_pd")
+
 
 def compile_count() -> int:
     """Distinct jitted executables built so far (sweep + single-config)."""
     return _COMPILE_COUNT[0]
+
+
+def reset_compile_count() -> None:
+    """Rebase the compile counter (the executable cache itself is kept, so
+    this never *causes* recompiles).  Tests assert on deltas around this —
+    the process-global absolute value is order-dependent across tests."""
+    _COMPILE_COUNT[0] = 0
+
+
+def _with_wr(traces: dict) -> dict:
+    """Default a missing write field to all-reads.
+
+    Must happen OUTSIDE the jitted function: a changed dict structure would
+    re-trace without registering in the compile counter."""
+    if "wr" in traces:
+        return traces
+    t = dict(traces)
+    t["wr"] = jnp.zeros(t["inst"].shape, jnp.int32)
+    return t
+
+
+def _with_timing_defaults(params: dict) -> dict:
+    """Default missing write/refresh timings to 0 (disabled) and a missing
+    power-down threshold to effectively-never (t_pd = BIG): a legacy params
+    dict must reproduce the pre-write-era engine exactly, and t_pd = 0
+    would mean *instant* power-down, not no power-down."""
+    missing = [k for k in _TIMING_DEFAULTS if k not in params]
+    if not missing:
+        return params
+    p = dict(params)
+    for k in missing:
+        fill = BIG if k == "t_pd" else 0
+        p[k] = jnp.full(np.shape(p["t_cl"]), fill, jnp.int32)
+    return p
 
 
 @functools.lru_cache(maxsize=None)
@@ -259,12 +416,13 @@ def batched_simulate(params: dict, traces: dict, horizon: int,
     r_max = params["dur"].shape[1]
     fn = _compiled(horizon, core, banks,
                    (n_cells, n_cores, n_req_max, r_max), True)
-    return fn(params, traces)
+    return fn(_with_timing_defaults(params), _with_wr(traces))
 
 
 def simulate(stack: StackConfig, traces: dict, horizon: int,
              core: CoreParams = CoreParams()) -> dict:
-    """traces: dict of (C, n_req) arrays (inst f32; rank/bank/row i32).
+    """traces: dict of (C, n_req) arrays (inst f32; rank/bank/row i32;
+    optional wr i32, defaulting to all-reads).
     Returns metrics dict of scalars / per-core arrays (all jnp)."""
     n_cores, n_req = traces["inst"].shape
     params = stack.to_params()
@@ -272,4 +430,4 @@ def simulate(stack: StackConfig, traces: dict, horizon: int,
     fn = _compiled(horizon, core, stack.banks_per_rank,
                    (1, n_cores, n_req, stack.n_ranks), False)
     return fn({k: jnp.asarray(v) for k, v in params.items()},
-              {k: jnp.asarray(v) for k, v in traces.items()})
+              _with_wr({k: jnp.asarray(v) for k, v in traces.items()}))

@@ -34,7 +34,9 @@ from repro.core.smla.traces import WorkloadSpec, core_traces, stack_traces
 
 #: metrics that are scalars per cell (the rest are per-core arrays)
 SCALAR_METRICS = ("bandwidth_gbps", "n_act", "n_row_conflicts", "bus_util",
-                  "horizon_ns", "makespan_ns")
+                  "horizon_ns", "makespan_ns", "n_wr", "bus_cycles",
+                  "wr_bus_cycles", "refresh_cycles", "pd_cycles", "pd_frac",
+                  "n_grants", "n_slot_grants", "n_enqueued", "n_outstanding")
 
 
 @dataclasses.dataclass(frozen=True)

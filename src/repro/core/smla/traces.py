@@ -3,12 +3,17 @@
 The paper drives its simulator with Pin traces of 31 SPEC CPU2006 / TPC /
 STREAM applications.  Those traces are not available offline, so we generate
 parameterised synthetic stand-ins spanning the same characteristics space:
-MPKI (memory intensity), row-buffer locality, and bank/rank spread.  The
-workload suite below covers the paper's reported MPKI range (<1 up to >50,
-Fig. 11/14); per-"application" results are therefore qualitative stand-ins
-while suite-average trends are the comparison target (EXPERIMENTS.md §Paper).
+MPKI (memory intensity), row-buffer locality, bank/rank spread, and write
+fraction.  The workload suite below covers the paper's reported MPKI range
+(<1 up to >50, Fig. 11/14); per-"application" results are therefore
+qualitative stand-ins while suite-average trends are the comparison target
+(EXPERIMENTS.md §Paper).
 
 Trace format: int32 arrays (n_req,) per field + float32 instruction index.
+The `wr` field marks write requests (0 = read, 1 = write); it is drawn
+*after* every other field from the same generator, so a trace with
+`write_frac=0` is bit-identical (inst/rank/bank/row) to one generated
+before writes existed.
 """
 from __future__ import annotations
 
@@ -23,26 +28,44 @@ class WorkloadSpec:
     mpki: float          # misses per kilo-instruction
     row_hit: float       # P(next access falls in the open row)
     bank_spread: float = 1.0   # 1 = uniform banks; <1 = favours few banks
+    write_frac: float = 0.0    # P(request is a write)
 
 
 # 31 stand-ins spanning the paper's workload space (SPEC/TPC/STREAM-like).
+# Write fractions follow the usual workload-class shapes: SPEC-like mixes
+# around 15-35% writes, STREAM-triad-like 1/3, TPC-like update-heavy ~40%.
 WORKLOADS: list[WorkloadSpec] = [
-    WorkloadSpec("low.01", 0.3, 0.70), WorkloadSpec("low.02", 0.5, 0.60),
-    WorkloadSpec("low.03", 0.8, 0.55), WorkloadSpec("low.04", 1.1, 0.65),
-    WorkloadSpec("low.05", 1.6, 0.50), WorkloadSpec("low.06", 2.2, 0.60),
-    WorkloadSpec("low.07", 3.0, 0.45), WorkloadSpec("mid.01", 4.0, 0.55),
-    WorkloadSpec("mid.02", 5.0, 0.40), WorkloadSpec("mid.03", 6.5, 0.50),
-    WorkloadSpec("mid.04", 8.0, 0.35), WorkloadSpec("mid.05", 10.0, 0.45),
-    WorkloadSpec("mid.06", 12.0, 0.30), WorkloadSpec("mid.07", 14.0, 0.40),
-    WorkloadSpec("mid.08", 16.0, 0.35), WorkloadSpec("mid.09", 18.0, 0.50),
-    WorkloadSpec("high.01", 20.0, 0.30), WorkloadSpec("high.02", 23.0, 0.45),
-    WorkloadSpec("high.03", 26.0, 0.25), WorkloadSpec("high.04", 29.0, 0.40),
-    WorkloadSpec("high.05", 32.0, 0.30), WorkloadSpec("high.06", 35.0, 0.50),
-    WorkloadSpec("high.07", 38.0, 0.25), WorkloadSpec("high.08", 41.0, 0.35),
-    WorkloadSpec("high.09", 44.0, 0.30), WorkloadSpec("high.10", 47.0, 0.20),
-    WorkloadSpec("stream.1", 50.0, 0.85), WorkloadSpec("stream.2", 55.0, 0.80),
-    WorkloadSpec("stream.3", 60.0, 0.90), WorkloadSpec("tpc.1", 22.0, 0.15),
-    WorkloadSpec("tpc.2", 28.0, 0.10),
+    WorkloadSpec("low.01", 0.3, 0.70, write_frac=0.15),
+    WorkloadSpec("low.02", 0.5, 0.60, write_frac=0.25),
+    WorkloadSpec("low.03", 0.8, 0.55, write_frac=0.20),
+    WorkloadSpec("low.04", 1.1, 0.65, write_frac=0.30),
+    WorkloadSpec("low.05", 1.6, 0.50, write_frac=0.15),
+    WorkloadSpec("low.06", 2.2, 0.60, write_frac=0.25),
+    WorkloadSpec("low.07", 3.0, 0.45, write_frac=0.20),
+    WorkloadSpec("mid.01", 4.0, 0.55, write_frac=0.30),
+    WorkloadSpec("mid.02", 5.0, 0.40, write_frac=0.15),
+    WorkloadSpec("mid.03", 6.5, 0.50, write_frac=0.25),
+    WorkloadSpec("mid.04", 8.0, 0.35, write_frac=0.20),
+    WorkloadSpec("mid.05", 10.0, 0.45, write_frac=0.30),
+    WorkloadSpec("mid.06", 12.0, 0.30, write_frac=0.15),
+    WorkloadSpec("mid.07", 14.0, 0.40, write_frac=0.25),
+    WorkloadSpec("mid.08", 16.0, 0.35, write_frac=0.20),
+    WorkloadSpec("mid.09", 18.0, 0.50, write_frac=0.30),
+    WorkloadSpec("high.01", 20.0, 0.30, write_frac=0.15),
+    WorkloadSpec("high.02", 23.0, 0.45, write_frac=0.25),
+    WorkloadSpec("high.03", 26.0, 0.25, write_frac=0.20),
+    WorkloadSpec("high.04", 29.0, 0.40, write_frac=0.30),
+    WorkloadSpec("high.05", 32.0, 0.30, write_frac=0.15),
+    WorkloadSpec("high.06", 35.0, 0.50, write_frac=0.25),
+    WorkloadSpec("high.07", 38.0, 0.25, write_frac=0.20),
+    WorkloadSpec("high.08", 41.0, 0.35, write_frac=0.30),
+    WorkloadSpec("high.09", 44.0, 0.30, write_frac=0.15),
+    WorkloadSpec("high.10", 47.0, 0.20, write_frac=0.25),
+    WorkloadSpec("stream.1", 50.0, 0.85, write_frac=1 / 3),
+    WorkloadSpec("stream.2", 55.0, 0.80, write_frac=1 / 3),
+    WorkloadSpec("stream.3", 60.0, 0.90, write_frac=1 / 3),
+    WorkloadSpec("tpc.1", 22.0, 0.15, write_frac=0.40),
+    WorkloadSpec("tpc.2", 28.0, 0.10, write_frac=0.40),
 ]
 
 
@@ -69,10 +92,13 @@ def synthetic_trace(seed: int, spec: WorkloadSpec, n_req: int,
         if not stay[i]:
             cur[r, b] = fresh[i]
         row[i] = cur[r, b]
+    # writes LAST: the draw must not perturb inst/rank/bank/row streams.
+    wr = (rng.random(n_req) < spec.write_frac).astype(np.int32)
     return {"inst": inst,
             "rank": rank.astype(np.int32),
             "bank": bank.astype(np.int32),
-            "row": row.astype(np.int32)}
+            "row": row.astype(np.int32),
+            "wr": wr}
 
 
 def core_traces(seed: int, specs: list[WorkloadSpec], n_req: int,
@@ -107,9 +133,25 @@ def stack_traces(trace_list: list[dict]) -> dict:
 
 
 def lm_serving_trace(seed: int, n_req: int, n_ranks: int, n_banks: int,
-                     kv_fraction: float = 0.7) -> dict:
+                     kv_fraction: float = 0.7,
+                     kv_write_frac: float = 0.1) -> dict:
     """A trace shaped like LM decode traffic: long sequential KV-cache
     sweeps (high row locality) interleaved with weight streaming — used to
-    drive the simulator from this framework's own workloads."""
-    spec = WorkloadSpec("lm.decode", 45.0, 0.9 * kv_fraction + 0.05)
-    return synthetic_trace(seed, spec, n_req, n_ranks, n_banks)
+    drive the simulator from this framework's own workloads.
+
+    Decode writes are the per-token K/V appends: `kv_write_frac` of requests
+    are writes, and they land on a monotonically advancing append row (the
+    KV tail), giving the write stream the near-perfect spatial locality real
+    KV caches have rather than uniform-random write addresses.
+    """
+    spec = WorkloadSpec("lm.decode", 45.0, 0.9 * kv_fraction + 0.05,
+                        write_frac=kv_write_frac)
+    t = synthetic_trace(seed, spec, n_req, n_ranks, n_banks)
+    # retarget writes at the KV append tail: consecutive writes walk forward
+    # one row every `n_banks` appends (row granularity >> one K/V entry).
+    w = np.flatnonzero(t["wr"])
+    if w.size:
+        rng = np.random.default_rng(seed + 1)
+        base = int(rng.integers(0, 4096))
+        t["row"][w] = (base + np.arange(w.size) // max(n_banks, 1)) % 4096
+    return t

@@ -13,6 +13,24 @@ import pytest
 import repro.launch.compat  # noqa: F401  (installs new-API shims on JAX 0.4.x)
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate tests/golden/*.json from the current engine "
+             "instead of comparing against it")
+
+
+@pytest.fixture(autouse=True)
+def _reset_smla_compile_count():
+    """engine._COMPILE_COUNT is process-global, so absolute values are
+    test-order-dependent.  Rebase it per test; compile-budget assertions
+    read deltas from zero.  The executable cache is untouched — resetting
+    never causes recompiles."""
+    from repro.core.smla import engine
+    engine.reset_compile_count()
+    yield
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

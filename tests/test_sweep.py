@@ -1,6 +1,11 @@
-"""Batched sweep engine: bit-exactness vs per-config simulate, padding
-edge cases, and compile-cache behaviour.  (No hypothesis dependency — this
-module must run in a bare environment.)"""
+"""Batched sweep engine: bit-exactness vs per-config simulate (including
+write traffic and refresh), padding edge cases, and compile-cache
+behaviour.  Compile-budget assertions read deltas via the autouse
+`reset_compile_count` fixture — `engine._COMPILE_COUNT` is process-global,
+so absolute values are test-order-dependent.  (No hypothesis dependency —
+this module must run in a bare environment.)"""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -11,7 +16,7 @@ from repro.core.smla.traces import WORKLOADS, WorkloadSpec
 
 HORIZON = 6_000
 N_REQ = 120
-SPECS = [WORKLOADS[4], WORKLOADS[20]]
+SPECS = [WORKLOADS[4], WORKLOADS[20]]      # both carry nonzero write_frac
 
 
 def _assert_cell_equal(name, got, ref):
@@ -36,6 +41,31 @@ def test_sweep_matches_simulate_all_models_and_layers():
     for cell, got in zip(cells, res.cells):
         ref = engine.simulate(cell.stack, cell.traces, HORIZON)
         _assert_cell_equal(cell.name, got, ref)
+
+
+def test_sweep_matches_simulate_writes_and_refresh():
+    """Write-heavy traces + aggressive refresh across all five IO models:
+    the batched path stays bit-identical to simulate(), the write/refresh
+    machinery demonstrably fires, and the mixed batch still costs at most
+    one compile per static shape group (here: one group)."""
+    specs = [WorkloadSpec("wrh", 30.0, 0.4, write_frac=0.5),
+             WorkloadSpec("rd", 12.0, 0.6, write_frac=0.1)]
+    cells = []
+    for L in (2, 4):
+        for name, sc in paper_configs(L).items():
+            sc = dataclasses.replace(sc, t_refi_ns=400.0)
+            cells.append(sweep.make_cell(f"L{L}/{name}", sc, specs,
+                                         N_REQ, seed=7))
+    c0 = engine.compile_count()
+    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), HORIZON))
+    assert engine.compile_count() - c0 <= 1      # one shape group
+    saw_wr = saw_ref = 0
+    for cell, got in zip(cells, res.cells):
+        ref = engine.simulate(cell.stack, cell.traces, HORIZON)
+        _assert_cell_equal(cell.name, got, ref)
+        saw_wr += int(np.asarray(got["n_wr"]))
+        saw_ref += int(np.asarray(got["refresh_cycles"]))
+    assert saw_wr > 0 and saw_ref > 0
 
 
 def test_sweep_pads_mixed_request_counts():
@@ -70,10 +100,10 @@ def test_compile_cache_reuse():
                   for n, sc in paper_configs(4).items())
     spec = sweep.SweepSpec(cells, HORIZON)
     sweep.run_sweep(spec)                            # warm (may compile)
-    before = engine.compile_count()
+    engine.reset_compile_count()                     # delta from here
     sweep.run_sweep(spec)
     sweep.run_sweep(sweep.SweepSpec(cells, HORIZON))
-    assert engine.compile_count() == before
+    assert engine.compile_count() == 0
 
 
 def test_scalars_structured_output():
