@@ -15,6 +15,8 @@ import json
 import os
 from typing import Any
 
+import numpy as np
+
 BENCH_JSON_ENV = "BENCH_JSON"
 BENCH_JSON_DEFAULT = "BENCH_smla_sweep.json"
 
@@ -36,6 +38,36 @@ def _jsonable(x: Any) -> Any:
     if hasattr(x, "tolist"):                      # numpy scalar / array
         return x.tolist()
     return x
+
+
+def perf_block(wall_s: float, res, horizon: int,
+               chunk: int | None) -> dict:
+    """Machine-readable perf summary for one figure's sweep, so early-exit
+    gains are comparable across commits.
+
+    res: a `SweepResult`.  Reports wall time, throughput (cells/s and
+    simulated fast-cycles/s, where a cell's simulated cycles are the
+    chunks it actually ran), and how much of the horizon the early exit
+    saved (`chunks_run_total` vs `chunks_possible`)."""
+    from repro.core.smla import engine
+    chunk_eff = engine.effective_chunk(horizon, chunk)
+    n_chunks_max = engine.n_chunks(horizon, chunk)
+    chunks = np.array([int(np.asarray(c["chunks_run"])) for c in res.cells])
+    sim_cycles = int(np.minimum(chunks * chunk_eff, horizon).sum())
+    possible = n_chunks_max * len(chunks)
+    wall = max(wall_s, 1e-9)
+    return {
+        "wall_s": round(wall_s, 3),
+        "cells_per_s": round(len(chunks) / wall, 3),
+        "sim_fast_cycles": sim_cycles,
+        "sim_fast_cycles_per_s": round(sim_cycles / wall, 1),
+        "horizon": horizon,
+        "chunk": chunk_eff,
+        "n_chunks_max": n_chunks_max,
+        "chunks_run_total": int(chunks.sum()),
+        "chunks_possible": possible,
+        "early_exit_frac": round(1.0 - chunks.sum() / possible, 4),
+    }
 
 
 def emit_json(section: str, payload: dict, path: str | None = None) -> str:

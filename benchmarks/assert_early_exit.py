@@ -1,0 +1,48 @@
+"""CI gate: the chunked sweep engine's early exit must actually engage.
+
+Reads the fig11 section of `BENCH_smla_sweep.json` (written by
+`benchmarks/run.py --smoke` just before this runs) and fails unless at
+least one non-baseline cell ran strictly fewer chunks than the horizon
+allows — i.e. the while-loop terminated on measured completion, not on the
+horizon.  A regression that silently turns early exit back into
+fixed-horizon scanning (wrong exit predicate, chunks_run plumbing dropped,
+bucketing collapsing to one barrier) fails here even while all
+bit-identity tests still pass.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks._util import BENCH_JSON_DEFAULT, BENCH_JSON_ENV
+
+
+def main() -> int:
+    path = os.environ.get(BENCH_JSON_ENV, BENCH_JSON_DEFAULT)
+    with open(path) as f:
+        data = json.load(f)
+    fig = data.get("fig11")
+    if not fig or "perf" not in fig or "scalars" not in fig:
+        print(f"assert_early_exit: no fig11 perf/scalars in {path}",
+              file=sys.stderr)
+        return 1
+    n_chunks_max = int(fig["perf"]["n_chunks_max"])
+    names = fig["cell_names"]
+    chunks = fig["scalars"]["chunks_run"]
+    early = [(n, int(c)) for n, c in zip(names, chunks)
+             if "/baseline/" not in n and int(c) < n_chunks_max]
+    if not early:
+        print(f"assert_early_exit: no non-baseline cell exited before the "
+              f"horizon ({n_chunks_max} chunks) — early exit is not "
+              f"engaging", file=sys.stderr)
+        return 1
+    frac = fig["perf"]["early_exit_frac"]
+    print(f"assert_early_exit: OK — {len(early)} non-baseline cells exited "
+          f"early (e.g. {early[0][0]} after {early[0][1]}/{n_chunks_max} "
+          f"chunks); sweep-wide {frac:.0%} of chunks saved")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

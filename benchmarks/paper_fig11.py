@@ -9,22 +9,27 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit_json, scaled
+from benchmarks._util import emit_json, perf_block, scaled
 from repro.core.smla import engine, sweep
+from repro.core.smla.analytic import default_horizon
 from repro.core.smla.config import paper_configs
 from repro.core.smla.energy import energy_from_metrics
 from repro.core.smla.traces import WORKLOADS
 
 
-def run(n_req: int = 600, horizon: int = 80_000) -> list[str]:
+def run(n_req: int = 600, horizon: int | None = None) -> list[str]:
     n_req = scaled(n_req, 80)
-    horizon = scaled(horizon, 6_000)
     cfgs = paper_configs(4)
     workloads = [(w.name, [w], 0) for w in WORKLOADS]
     cells = sweep.paper_grid(workloads, layers=(4,), n_req=n_req)
+    if horizon is None:
+        # analytic worst case for the full run; smoke keeps the historic
+        # tiny horizon so its numbers stay comparable across commits
+        horizon = scaled(default_horizon(cells), 6_000)
 
+    spec = sweep.SweepSpec(tuple(cells), horizon)
     c0, t0 = engine.compile_count(), time.perf_counter()
-    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), horizon))
+    res = sweep.run_sweep(spec)
     wall = time.perf_counter() - t0
     compiles = engine.compile_count() - c0
     assert compiles <= 1, f"fig11 grid took {compiles} compiles (want <= 1)"
@@ -73,11 +78,13 @@ def run(n_req: int = 600, horizon: int = 80_000) -> list[str]:
     rows.append(f"# traffic: {int(scal['n_wr'].sum())} writes retired, "
                 f"mean pd_frac {float(scal['pd_frac'].mean()):.3f}, "
                 f"{int(scal['refresh_cycles'].sum())} refresh cycles")
+    perf = perf_block(wall, res, horizon, spec.chunk)
     rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
-                f"{wall:.1f}s wall")
+                f"{wall:.1f}s wall, {perf['cells_per_s']:.1f} cells/s, "
+                f"early-exit saved {perf['early_exit_frac']:.0%} of chunks")
     emit_json("fig11", {
         "n_req": n_req, "horizon": horizon, "n_cells": len(cells),
-        "compiles": compiles, "wall_s": round(wall, 2),
+        "compiles": compiles, "wall_s": round(wall, 2), "perf": perf,
         "geomean": {k: gm(v) for k, v in per.items()},
         "total_n_wr": int(scal["n_wr"].sum()),
         "mean_pd_frac": float(scal["pd_frac"].mean()),

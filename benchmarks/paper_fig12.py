@@ -12,8 +12,9 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit_json, scaled
+from benchmarks._util import emit_json, perf_block, scaled
 from repro.core.smla import engine, sweep
+from repro.core.smla.analytic import default_horizon
 from repro.core.smla.config import paper_configs
 from repro.core.smla.energy import energy_from_metrics
 from repro.core.smla.traces import WORKLOADS
@@ -22,11 +23,10 @@ SMLA = ("dedicated_slr", "cascaded_slr", "dedicated_mlr", "cascaded_mlr")
 CORES = (4, 8, 16)
 
 
-def run(n_mixes: int = 6, n_req: int = 500, horizon: int = 80_000,
+def run(n_mixes: int = 6, n_req: int = 500, horizon: int | None = None,
         seed: int = 0) -> list[str]:
     n_mixes = scaled(n_mixes, 2)
     n_req = scaled(n_req, 80)
-    horizon = scaled(horizon, 6_000)
     rng = np.random.default_rng(seed)
     cfgs = paper_configs(4)
 
@@ -41,9 +41,12 @@ def run(n_mixes: int = 6, n_req: int = 500, horizon: int = 80_000,
                 cells.append(sweep.make_cell(
                     f"c{cores}/m{m}/{cname}", sc, specs, n_req,
                     seed=seed + m))
+    if horizon is None:
+        horizon = scaled(default_horizon(cells), 6_000)
 
+    spec = sweep.SweepSpec(tuple(cells), horizon)
     c0, t0 = engine.compile_count(), time.perf_counter()
-    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), horizon))
+    res = sweep.run_sweep(spec)
     wall = time.perf_counter() - t0
     compiles = engine.compile_count() - c0
     assert compiles <= len(CORES), \
@@ -83,13 +86,15 @@ def run(n_mixes: int = 6, n_req: int = 500, horizon: int = 80_000,
                               wr_share=float(np.mean(wshare))))
     rows.append("# paper: 16-core SLR ws +50.4% DIO / +55.8% CIO; "
                 "energy -17.9% (CIO SLR); MLR below SLR")
+    perf = perf_block(wall, res, horizon, spec.chunk)
     rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
-                f"{wall:.1f}s wall")
+                f"{wall:.1f}s wall, early-exit saved "
+                f"{perf['early_exit_frac']:.0%} of chunks")
     emit_json("fig12", {
         "n_mixes": n_mixes, "n_req": n_req, "horizon": horizon,
         "n_cells": len(cells), "compiles": compiles,
-        "wall_s": round(wall, 2), "mixes": {f"c{c}/m{m}": v for (c, m), v
-                                            in mixes.items()},
+        "wall_s": round(wall, 2), "perf": perf,
+        "mixes": {f"c{c}/m{m}": v for (c, m), v in mixes.items()},
         "rows": table,
     })
     return rows

@@ -8,8 +8,9 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit_json, scaled
+from benchmarks._util import emit_json, perf_block, scaled
 from repro.core.smla import engine, sweep
+from repro.core.smla.analytic import default_horizon
 from repro.core.smla.config import paper_configs
 from repro.core.smla.energy import energy_from_metrics
 from repro.core.smla.traces import WORKLOADS
@@ -18,11 +19,10 @@ SMLA = ("dedicated_slr", "cascaded_slr", "dedicated_mlr", "cascaded_mlr")
 LAYERS = (2, 4, 8)
 
 
-def run(n_mixes: int = 4, n_req: int = 500, horizon: int = 80_000,
+def run(n_mixes: int = 4, n_req: int = 500, horizon: int | None = None,
         seed: int = 1) -> list[str]:
     n_mixes = scaled(n_mixes, 2)
     n_req = scaled(n_req, 80)
-    horizon = scaled(horizon, 6_000)
     rng = np.random.default_rng(seed)
 
     cells, cfg_of = [], {}
@@ -36,9 +36,12 @@ def run(n_mixes: int = 4, n_req: int = 500, horizon: int = 80_000,
                 cells.append(sweep.make_cell(
                     f"L{layers}/m{m}/{cname}", sc, specs, n_req,
                     seed=seed + m))
+    if horizon is None:
+        horizon = scaled(default_horizon(cells), 6_000)
 
+    spec = sweep.SweepSpec(tuple(cells), horizon)
     c0, t0 = engine.compile_count(), time.perf_counter()
-    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), horizon))
+    res = sweep.run_sweep(spec)
     wall = time.perf_counter() - t0
     compiles = engine.compile_count() - c0
     assert compiles <= len(LAYERS), \
@@ -69,12 +72,14 @@ def run(n_mixes: int = 4, n_req: int = 500, horizon: int = 80_000,
                               pd_frac=float(np.mean(pd))))
     rows.append("# paper: benefits grow with layer count under SLR; "
                 "8-layer DIO edges CIO (upper-layer command bandwidth)")
+    perf = perf_block(wall, res, horizon, spec.chunk)
     rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
-                f"{wall:.1f}s wall")
+                f"{wall:.1f}s wall, early-exit saved "
+                f"{perf['early_exit_frac']:.0%} of chunks")
     emit_json("fig13", {
         "n_mixes": n_mixes, "n_req": n_req, "horizon": horizon,
         "n_cells": len(cells), "compiles": compiles,
-        "wall_s": round(wall, 2), "rows": table,
+        "wall_s": round(wall, 2), "perf": perf, "rows": table,
     })
     return rows
 

@@ -13,8 +13,9 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit_json, scaled
+from benchmarks._util import emit_json, perf_block, scaled
 from repro.core.smla import engine, sweep
+from repro.core.smla.analytic import default_horizon
 from repro.core.smla.config import paper_configs
 from repro.core.smla.energy import energy_from_metrics
 from repro.core.smla.traces import WorkloadSpec
@@ -22,18 +23,20 @@ from repro.core.smla.traces import WorkloadSpec
 MPKIS = (0.4, 1.6, 6.4, 12.8, 25.6, 51.2)
 
 
-def run(n_req: int = 500, horizon: int = 100_000) -> list[str]:
+def run(n_req: int = 500, horizon: int | None = None) -> list[str]:
     n_req = scaled(n_req, 80)
-    horizon = scaled(horizon, 6_000)
     cfgs = paper_configs(4)
     workloads = [(f"u{mpki}",
                   [WorkloadSpec(f"u{mpki}", mpki, 0.5, write_frac=0.25)] * 2,
                   0)
                  for mpki in MPKIS]
     cells = sweep.paper_grid(workloads, layers=(4,), n_req=n_req)
+    if horizon is None:
+        horizon = scaled(default_horizon(cells), 6_000)
 
+    spec = sweep.SweepSpec(tuple(cells), horizon)
     c0, t0 = engine.compile_count(), time.perf_counter()
-    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), horizon))
+    res = sweep.run_sweep(spec)
     wall = time.perf_counter() - t0
     compiles = engine.compile_count() - c0
     assert compiles <= 1, f"fig14 grid took {compiles} compiles (want <= 1)"
@@ -64,11 +67,14 @@ def run(n_req: int = 500, horizon: int = 100_000) -> list[str]:
                 f"dio {rels_d[0]:.3f}->{rels_d[-1]:.3f}, "
                 f"cio {rels_c[0]:.3f}->{rels_c[-1]:.3f} "
                 f"(paper: overhead decays, CIO ~30% below DIO)")
+    perf = perf_block(wall, res, horizon, spec.chunk)
     rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
-                f"{wall:.1f}s wall")
+                f"{wall:.1f}s wall, early-exit saved "
+                f"{perf['early_exit_frac']:.0%} of chunks")
     emit_json("fig14", {
         "n_req": n_req, "horizon": horizon, "n_cells": len(cells),
-        "compiles": compiles, "wall_s": round(wall, 2), "rows": table,
+        "compiles": compiles, "wall_s": round(wall, 2), "perf": perf,
+        "rows": table,
     })
     return rows
 

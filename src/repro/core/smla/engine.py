@@ -1,5 +1,5 @@
 """Cycle-level 3D-stacked DRAM simulator (the paper's evaluation vehicle),
-as a single vectorised `lax.scan` over fast cycles.
+as a vectorised scan over fast cycles with chunked early exit.
 
 Time unit: one *fast cycle* = 1 / (L * F)  (1.25 ns for the paper's 4-layer,
 200 MHz Wide-IO baseline) — every Table-2 quantity is an integer multiple.
@@ -39,6 +39,22 @@ it over a stacked (config, workload) cell axis.  Compiled executables are
 cached per static signature; ``compile_count()`` exposes the number of
 distinct compiles for benchmark assertions and ``reset_compile_count()``
 rebases it (tests assert on deltas, never absolutes).
+
+Execution is *chunked*: instead of one fixed `lax.scan` over the full
+horizon, a `lax.while_loop` runs fixed-width scan chunks (``chunk`` fast
+cycles each, default ``DEFAULT_CHUNK``) and terminates as soon as every
+core has ``served >= n_req`` — so wall time is proportional to the
+simulated *makespan*, not to the horizon.  Steps past the horizon in the
+final partial chunk are gated to exact no-ops, and all fixed-work counters
+freeze once work completes (``work_left`` gating plus a per-core freeze of
+the instruction counter at completion), so chunked results are
+bit-identical to a full-horizon run for every metric.  The number of
+chunks actually executed is returned as the ``chunks_run`` diagnostic —
+the only metric allowed to depend on the chunk size.  Under `vmap`, JAX's
+while-loop batching masks finished cells, so each cell of a stacked batch
+freezes (and reports ``chunks_run``) at its *own* exit point; the batch
+runs until its slowest member finishes, which is why ``sweep.run_sweep``
+buckets cells by estimated makespan before stacking.
 """
 from __future__ import annotations
 
@@ -54,6 +70,26 @@ from repro.core.smla.config import StackConfig
 BIG = jnp.int32(2**30)
 Q_SIZE = 32
 
+#: fast cycles per early-exit scan chunk; ``chunk=None`` disables chunking
+#: (one chunk spanning the whole horizon — the full-horizon reference run).
+#: 1024 measured best on the fig11 grid: fine enough exit granularity
+#: without noticeable while-loop dispatch overhead.
+DEFAULT_CHUNK = 1024
+
+
+def effective_chunk(horizon: int, chunk: int | None) -> int:
+    """The scan-chunk width actually used for `horizon`: clamped to
+    [1, horizon]; None means one full-horizon chunk.  Single source of
+    truth for every consumer of the chunking policy (the engine itself,
+    perf reporting, CI gates)."""
+    return horizon if chunk is None else max(1, min(int(chunk), horizon))
+
+
+def n_chunks(horizon: int, chunk: int | None) -> int:
+    """Maximum while-loop iterations for (horizon, chunk): the bound
+    `chunks_run` reaches when early exit never engages."""
+    return -(-horizon // effective_chunk(horizon, chunk))
+
 
 @dataclasses.dataclass(frozen=True)
 class CoreParams:
@@ -63,11 +99,17 @@ class CoreParams:
 
 
 def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
-              banks: int) -> dict:
+              banks: int, chunk: int | None = None) -> dict:
     """One full simulation; every config quantity in `params` is traced.
 
     traces: dict of (n_cores, n_req_max) arrays; the cell's real request
     count is params['n_req'] (padding beyond it is never read).
+
+    `chunk` fast cycles are scanned per while-loop iteration; the loop
+    exits at the first chunk boundary where all cores completed their
+    fixed work (or at the horizon).  `chunk=None` means one full-horizon
+    chunk.  Results are bit-identical across chunk sizes; only the
+    `chunks_run` diagnostic varies.
     """
     n_cores, n_req_max = traces["inst"].shape
     R = params["dur"].shape[0]                      # padded rank count
@@ -247,8 +289,14 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
                              tr_inst[jnp.arange(n_cores),
                                      jnp.minimum(c_next, n_req - 1)],
                              jnp.float32(1e30))
+        # freeze a core's instruction counter once its fixed work is done:
+        # post-completion progress never feeds back into the simulation
+        # (no requests left to arrive) and would otherwise make the `inst`
+        # metric depend on how far past the makespan the scan runs — the
+        # one obstacle to horizon-independent (early-exit) execution.
+        advance = window_ok & (served < n_req)
         c_inst = jnp.minimum(
-            c_inst + jnp.where(window_ok, core.inst_per_fast_cycle, 0.0),
+            c_inst + jnp.where(advance, core.inst_per_fast_cycle, 0.0),
             nxt_inst)
 
         # ---- 6. power-down residency --------------------------------------
@@ -301,7 +349,36 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         pd_cycles=jnp.zeros((), i32),
         n_grants=jnp.zeros((), i32), n_slot_grants=jnp.zeros((), i32),
     )
-    final, _ = jax.lax.scan(step, st, jnp.arange(horizon))
+    # ---- chunked execution with early exit --------------------------------
+    # Fixed-width scan chunks under a while loop: exit at the first chunk
+    # boundary where every core's fixed work is done.  Steps with
+    # t >= horizon (final partial chunk only) are gated to exact no-ops, so
+    # any chunk size replays the full-horizon scan cycle-for-cycle up to
+    # the exit point — and past it every metric is provably frozen
+    # (`work_left` gating, empty queue, per-core c_inst freeze).
+    chunk_c = effective_chunk(horizon, chunk)
+    k_max = n_chunks(horizon, chunk)
+
+    def gated_step(s, t):
+        # step() writes into its argument dict, so hand it a shallow copy
+        # to keep `s` as the pre-step state the gate can fall back to.
+        new_s, _ = step(dict(s), t)
+        live = t < horizon
+        return jax.tree_util.tree_map(
+            lambda n, o: jnp.where(live, n, o), new_s, s), None
+
+    def loop_cond(carry):
+        s, k = carry
+        return (k < k_max) & (s["served"] < n_req).any()
+
+    def loop_body(carry):
+        s, k = carry
+        ts = k * chunk_c + jnp.arange(chunk_c, dtype=jnp.int32)
+        s, _ = jax.lax.scan(gated_step, s, ts)
+        return s, k + 1
+
+    final, chunks_run = jax.lax.while_loop(loop_cond, loop_body,
+                                           (st, jnp.int32(0)))
     served, c_finish, c_inst = (final["served"], final["c_finish"],
                                 final["c_inst"])
 
@@ -342,6 +419,10 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         "horizon_ns": jnp.asarray(t_ns, jnp.float32),
         "makespan_ns": makespan_ns,
         "inst": c_inst,
+        # diagnostic: scan chunks actually executed (< ceil(horizon/chunk)
+        # when early exit engaged).  The only metric that may legitimately
+        # differ across chunk sizes.
+        "chunks_run": chunks_run,
     }
 
 
@@ -396,31 +477,37 @@ def _with_timing_defaults(params: dict) -> dict:
 
 @functools.lru_cache(maxsize=None)
 def _compiled(horizon: int, core: CoreParams, banks: int,
-              shapes_key: tuple, batched: bool):
+              shapes_key: tuple, batched: bool, chunk: int | None):
     """One jitted executable per static signature.
 
     shapes_key pins (n_cells, n_cores, n_req_max, r_max) so each cache miss
     corresponds to exactly one XLA compilation of the returned function.
     """
     _COMPILE_COUNT[0] += 1
-    fn = functools.partial(_sim_core, horizon=horizon, core=core, banks=banks)
+    fn = functools.partial(_sim_core, horizon=horizon, core=core,
+                           banks=banks, chunk=chunk)
     if batched:
         fn = jax.vmap(fn)
     return jax.jit(fn)
 
 
 def batched_simulate(params: dict, traces: dict, horizon: int,
-                     core: CoreParams, banks: int) -> dict:
-    """Run a stacked batch of cells: every leaf has a leading cell axis."""
+                     core: CoreParams, banks: int, *,
+                     chunk: int | None = DEFAULT_CHUNK) -> dict:
+    """Run a stacked batch of cells: every leaf has a leading cell axis.
+
+    Inputs may carry a per-device sharding over the cell axis (see
+    ``sweep.run_sweep``); the jitted program then partitions along it."""
     n_cells, n_cores, n_req_max = traces["inst"].shape
     r_max = params["dur"].shape[1]
     fn = _compiled(horizon, core, banks,
-                   (n_cells, n_cores, n_req_max, r_max), True)
+                   (n_cells, n_cores, n_req_max, r_max), True, chunk)
     return fn(_with_timing_defaults(params), _with_wr(traces))
 
 
 def simulate(stack: StackConfig, traces: dict, horizon: int,
-             core: CoreParams = CoreParams()) -> dict:
+             core: CoreParams = CoreParams(), *,
+             chunk: int | None = DEFAULT_CHUNK) -> dict:
     """traces: dict of (C, n_req) arrays (inst f32; rank/bank/row i32;
     optional wr i32, defaulting to all-reads).
     Returns metrics dict of scalars / per-core arrays (all jnp)."""
@@ -428,6 +515,6 @@ def simulate(stack: StackConfig, traces: dict, horizon: int,
     params = stack.to_params()
     params["n_req"] = np.int32(n_req)
     fn = _compiled(horizon, core, stack.banks_per_rank,
-                   (1, n_cores, n_req, stack.n_ranks), False)
+                   (1, n_cores, n_req, stack.n_ranks), False, chunk)
     return fn({k: jnp.asarray(v) for k, v in params.items()},
               _with_wr({k: jnp.asarray(v) for k, v in traces.items()}))

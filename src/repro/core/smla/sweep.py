@@ -17,6 +17,19 @@ banks-per-rank) — one compile per group, cached across calls by
 models x mixes) is one compile and the Fig-12 grid compiles once per core
 count.
 
+Within a group, execution is *makespan-aware*: the chunked engine exits a
+stacked batch only when its slowest cell finishes, so one slow baseline
+cell would otherwise hold a batch of fast cascaded cells at the barrier.
+`run_sweep` therefore orders cells by a cheap analytic service-time
+estimate (`analytic.estimate_service_cycles`) and splits the group into
+equal-size buckets of similar expected makespan — every bucket shares the
+same padded static shapes (short buckets are padded with duplicates of
+their own fastest cell), so the whole group is still ONE compile, invoked
+once per bucket.  When more than one JAX device is visible, the stacked
+cell axis of each bucket is sharded across devices (bucket sizes are
+rounded up to a device multiple); on a single device the sharding path is
+skipped entirely.
+
 Metric results come back as structured per-cell dicts plus stacked scalar
 arrays (`SweepResult.scalars`) for machine-readable benchmark output.
 """
@@ -25,18 +38,21 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import jax
 import numpy as np
 
 from repro.core.smla import engine
 from repro.core.smla.config import StackConfig, paper_configs
 from repro.core.smla.engine import CoreParams
-from repro.core.smla.traces import WorkloadSpec, core_traces, stack_traces
+from repro.core.smla.traces import (WorkloadSpec, core_traces, pad_traces,
+                                    stack_traces)
 
 #: metrics that are scalars per cell (the rest are per-core arrays)
 SCALAR_METRICS = ("bandwidth_gbps", "n_act", "n_row_conflicts", "bus_util",
                   "horizon_ns", "makespan_ns", "n_wr", "bus_cycles",
                   "wr_bus_cycles", "refresh_cycles", "pd_cycles", "pd_frac",
-                  "n_grants", "n_slot_grants", "n_enqueued", "n_outstanding")
+                  "n_grants", "n_slot_grants", "n_enqueued", "n_outstanding",
+                  "chunks_run")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,10 +65,21 @@ class SweepCell:
 
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
-    """A batch of grid cells sharing one horizon and core model."""
+    """A batch of grid cells sharing one horizon and core model.
+
+    `chunk` is the engine's early-exit scan-chunk width (None = one
+    full-horizon chunk, i.e. no early exit).  `makespan_batching` orders
+    compatible cells by their analytic service-time estimate and buckets
+    them so fast cells are not barriered behind slow ones; `max_buckets`
+    caps how many buckets (executable invocations) one shape group may
+    use.  All buckets of a group share identical static shapes, so the
+    group still costs at most one compile."""
     cells: tuple[SweepCell, ...]
     horizon: int
     core: CoreParams = CoreParams()
+    chunk: int | None = engine.DEFAULT_CHUNK
+    makespan_batching: bool = True
+    max_buckets: int = 8
 
 
 @dataclasses.dataclass
@@ -64,10 +91,23 @@ class SweepResult:
         return self.cells[self.names.index(name)]
 
     def scalars(self, keys: Sequence[str] = SCALAR_METRICS) -> dict:
-        """Stacked (n_cells,) arrays of the scalar metrics + cell names."""
+        """Stacked (n_cells,) arrays of the scalar metrics + cell names.
+
+        Only scalar-per-cell metrics can be stacked this way; asking for a
+        per-core metric (e.g. ``ipc``) raises a ValueError instead of the
+        former cryptic ``float()``-on-array crash."""
         out = {"name": np.array(self.names)}
         for k in keys:
-            out[k] = np.array([float(c[k]) for c in self.cells])
+            vals = []
+            for name, c in zip(self.names, self.cells):
+                a = np.asarray(c[k]).ravel()
+                if a.size != 1:
+                    raise ValueError(
+                        f"scalars(): metric {k!r} is per-core (shape "
+                        f"{np.asarray(c[k]).shape} in cell {name!r}); use "
+                        f"result[name][{k!r}] for per-core arrays")
+                vals.append(float(a[0]))
+            out[k] = np.array(vals)
         return out
 
 
@@ -98,28 +138,86 @@ def paper_grid(workloads: Sequence[tuple[str, Sequence[WorkloadSpec], int]],
     return cells
 
 
+def _plan_buckets(spec: SweepSpec, group: list[SweepCell],
+                  n_dev: int) -> tuple[int, list[list[int]]]:
+    """Split one static-shape group into equal-size makespan buckets.
+
+    Returns (bucket_size, buckets); each bucket is a list of positions
+    into `group`, padded to `bucket_size` (a multiple of `n_dev`) by
+    repeating the bucket's own fastest member — a duplicate of a resident
+    cell never extends the bucket's early-exit point.  One bucket_size per
+    group keeps the whole group at a single compiled executable."""
+    n = len(group)
+    single = (not spec.makespan_batching or spec.chunk is None or n <= 1)
+    k = 1 if single else min(spec.max_buckets, n)
+    size = -(-n // k)
+    size = -(-size // n_dev) * n_dev            # device multiple
+    k = -(-n // size)
+    if k > 1:
+        from repro.core.smla import analytic    # lazy: analytic imports us
+        est = [analytic.estimate_service_cycles(c.stack, c.traces,
+                                                spec.core) for c in group]
+        order = sorted(range(n), key=lambda j: (est[j], j))
+    else:
+        order = list(range(n))
+    buckets = []
+    for b in range(k):
+        sl = order[b * size:(b + 1) * size]
+        sl = sl + [sl[0]] * (size - len(sl))
+        buckets.append(sl)
+    return size, buckets
+
+
+def _cell_sharding(n_dev: int):
+    """NamedSharding that splits a stacked batch's leading cell axis
+    across all visible devices (built through the launch.compat shims, so
+    it works on either JAX API surface)."""
+    from repro.launch import compat
+    mesh = compat.make_mesh((n_dev,), ("cells",),
+                            devices=np.array(jax.devices()))
+    return jax.sharding.NamedSharding(mesh,
+                                      jax.sharding.PartitionSpec("cells"))
+
+
 def run_sweep(spec: SweepSpec) -> SweepResult:
-    """Execute every cell, batching compatible cells into single vmapped
-    jit calls.  Metrics are bit-identical to per-cell `engine.simulate`."""
+    """Execute every cell, batching compatible cells into vmapped jit
+    calls — bucketed by estimated makespan so the chunked engine's early
+    exit is not barriered on a slow outlier, and sharded over the cell
+    axis when multiple devices are visible.  Metrics are bit-identical to
+    per-cell `engine.simulate` with the same `chunk`."""
     order: dict[tuple, list[int]] = {}
     for i, cell in enumerate(spec.cells):
         key = (cell.traces["inst"].shape[0], cell.stack.banks_per_rank)
         order.setdefault(key, []).append(i)
 
+    n_dev = max(len(jax.devices()), 1)
     results: list[dict | None] = [None] * len(spec.cells)
     for (_, banks), idxs in order.items():
-        batch = [spec.cells[i] for i in idxs]
-        r_max = max(c.stack.n_ranks for c in batch)
-        plist = []
-        for c in batch:
-            p = c.stack.to_params(r_max)
-            p["n_req"] = np.int32(c.traces["inst"].shape[1])
-            plist.append(p)
-        params = {k: np.stack([p[k] for p in plist]) for k in plist[0]}
-        traces = stack_traces([c.traces for c in batch])
-        out = engine.batched_simulate(params, traces, spec.horizon,
-                                      spec.core, banks)
-        for j, i in enumerate(idxs):
-            results[i] = {k: np.asarray(v)[j] for k, v in out.items()}
+        group = [spec.cells[i] for i in idxs]
+        r_max = max(c.stack.n_ranks for c in group)
+        n_req_max = max(c.traces["inst"].shape[1] for c in group)
+        size, buckets = _plan_buckets(spec, group, n_dev)
+        sharding = _cell_sharding(n_dev) if n_dev > 1 else None
+        for bucket in buckets:
+            batch = [group[j] for j in bucket]
+            plist = []
+            for c in batch:
+                p = c.stack.to_params(r_max)
+                p["n_req"] = np.int32(c.traces["inst"].shape[1])
+                plist.append(p)
+            params = {k: np.stack([p[k] for p in plist]) for k in plist[0]}
+            traces = stack_traces([pad_traces(c.traces, n_req_max)
+                                   for c in batch])
+            if sharding is not None:
+                params = jax.device_put(params, sharding)
+                traces = jax.device_put(traces, sharding)
+            out = engine.batched_simulate(params, traces, spec.horizon,
+                                          spec.core, banks,
+                                          chunk=spec.chunk)
+            # duplicate pad entries land on the same original index with
+            # bit-identical values — assigning them again is harmless.
+            for j_pos, j in enumerate(bucket):
+                results[idxs[j]] = {k: np.asarray(v)[j_pos]
+                                    for k, v in out.items()}
     return SweepResult(names=[c.name for c in spec.cells],
                        cells=results)

@@ -87,6 +87,9 @@ def _check_invariants(stack: StackConfig, m: dict, traces: dict):
     assert -1e-6 <= float(m["pd_frac"]) <= 1.0 + 1e-6
     assert int(m["pd_cycles"]) <= mk_cyc * stack.n_ranks
 
+    # chunked execution ran at least one chunk and never past the horizon
+    assert 1 <= int(m["chunks_run"]) <= -(-HORIZON // 1)
+
     assert float(m["bandwidth_gbps"]) <= stack.peak_bandwidth_gbps + 1e-6
     assert 0.0 <= float(m["bus_util"]) <= 1.0 + 1e-6
 
@@ -190,6 +193,27 @@ def test_legacy_params_without_write_refresh_timings():
         assert np.array_equal(np.asarray(out[k])[0], np.asarray(ref[k])), k
 
 
+def test_chunks_run_is_diagnostic_only():
+    """Deterministic tier of the chunk-invariance property: any chunk
+    width reproduces the full-horizon metrics bit-for-bit; only the
+    chunks_run diagnostic varies, bounded by ceil(horizon/chunk)."""
+    stack = dataclasses.replace(paper_configs(4)["cascaded_slr"],
+                                t_refi_ns=1500.0)
+    spec = WorkloadSpec("w", 25.0, 0.5, write_frac=0.4)
+    traces = core_traces(5, [spec] * N_CORES, N_REQ, stack.n_ranks,
+                         stack.banks_per_rank)
+    full = simulate(stack, traces, HORIZON, chunk=None)
+    assert int(full["chunks_run"]) == 1
+    for chunk in (100, 512, 2048):
+        m = simulate(stack, traces, HORIZON, chunk=chunk)
+        for k in full:
+            if k == "chunks_run":
+                continue
+            assert np.array_equal(np.asarray(m[k]),
+                                  np.asarray(full[k])), (chunk, k)
+        assert 1 <= int(m["chunks_run"]) <= -(-HORIZON // chunk)
+
+
 def test_lm_serving_trace_kv_writes():
     """The decode trace's KV-append writes: requested fraction, and rows
     that advance monotonically (append locality), not uniform-random."""
@@ -253,6 +277,33 @@ if HAVE_HYPOTHESIS:
         spec = WorkloadSpec("w", mpki, rowhit, write_frac=write_frac)
         m, traces = _run(stack, spec, seed)
         _check_invariants(stack, m, traces)
+
+    @_PROP_SETTINGS
+    @hypothesis.given(
+        cname=st.sampled_from(sorted(paper_configs(4))),
+        chunk=st.sampled_from([64, 300, 1024, HORIZON, HORIZON + 999]),
+        mpki=st.sampled_from([2.0, 25.0, 60.0]),
+        write_frac=st.sampled_from([0.0, 0.4]),
+        seed=st.integers(0, 50),
+    )
+    def test_chunks_run_never_changes_metrics_random(cname, chunk, mpki,
+                                                     write_frac, seed):
+        """Property form: for random configs/traces, every metric except
+        the chunks_run diagnostic is invariant to the chunk width."""
+        stack = dataclasses.replace(paper_configs(4)[cname],
+                                    t_refi_ns=1500.0)
+        spec = WorkloadSpec("w", mpki, 0.5, write_frac=write_frac)
+        traces = core_traces(seed, [spec] * N_CORES, N_REQ, stack.n_ranks,
+                             stack.banks_per_rank)
+        full = simulate(stack, traces, HORIZON, chunk=None)
+        m = simulate(stack, traces, HORIZON, chunk=chunk)
+        for k in full:
+            if k == "chunks_run":
+                continue
+            assert np.array_equal(np.asarray(m[k]),
+                                  np.asarray(full[k])), (cname, chunk, k)
+        assert 1 <= int(m["chunks_run"]) <= -(-HORIZON // min(chunk,
+                                                              HORIZON))
 
     @_PROP_SETTINGS
     @hypothesis.given(mpki=st.sampled_from([5.0, 40.0]),

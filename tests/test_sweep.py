@@ -1,5 +1,6 @@
 """Batched sweep engine: bit-exactness vs per-config simulate (including
-write traffic and refresh), padding edge cases, and compile-cache
+write traffic and refresh), chunked early-exit identity, makespan
+bucketing, multi-device sharding, padding edge cases, and compile-cache
 behaviour.  Compile-budget assertions read deltas via the autouse
 `reset_compile_count` fixture — `engine._COMPILE_COUNT` is process-global,
 so absolute values are test-order-dependent.  (No hypothesis dependency —
@@ -8,15 +9,21 @@ import dataclasses
 
 import numpy as np
 import pytest
+from conftest import run_subprocess_jax
 
 from repro.core.smla import engine, sweep
-from repro.core.smla.analytic import compare_configs, run_config
+from repro.core.smla.analytic import (compare_configs, default_horizon,
+                                      estimate_service_cycles, run_config)
 from repro.core.smla.config import paper_configs
-from repro.core.smla.traces import WORKLOADS, WorkloadSpec
+from repro.core.smla.traces import WORKLOADS, WorkloadSpec, core_traces
 
 HORIZON = 6_000
 N_REQ = 120
 SPECS = [WORKLOADS[4], WORKLOADS[20]]      # both carry nonzero write_frac
+#: memory-bound pair whose fixed work completes well inside HORIZON — used
+#: where a test needs early exit to actually engage (SPECS' low-MPKI core
+#: is arrival-limited past the horizon, so those cells never exit early)
+FAST_SPECS = [WORKLOADS[20], WORKLOADS[26]]
 
 
 def _assert_cell_equal(name, got, ref):
@@ -129,6 +136,16 @@ def test_compare_configs_matches_run_config():
         assert got.energy_nj == pytest.approx(ref.energy_nj), name
 
 
+def test_run_config_derived_horizon_completes():
+    """horizon=None derives the scan window analytically; the fixed work
+    must complete inside it (the horizon constants are gone for good)."""
+    sc = paper_configs(4)["dedicated_slr"]
+    r = run_config(sc, FAST_SPECS, n_req=60, horizon=None, seed=2)
+    assert (r.ipc > 0).all()
+    res = compare_configs(FAST_SPECS, n_req=60, horizon=None, seed=2)
+    assert set(res) == set(paper_configs(4))
+
+
 def test_to_params_padding_never_referenced():
     """Padded params must not change a single-cell simulation."""
     sc = paper_configs(4)["cascaded_mlr"]            # n_ranks == 1
@@ -148,3 +165,166 @@ def test_to_params_rejects_too_small_pad():
     sc = paper_configs(4)["baseline"]                # n_ranks == 4
     with pytest.raises(ValueError):
         sc.to_params(2)
+
+
+# ----------------------------------------------------------------------------
+# chunked early-exit execution
+# ----------------------------------------------------------------------------
+
+def test_chunked_bit_identity_all_models():
+    """Chunked runs (several chunk widths, including one that does not
+    divide the horizon and one larger than it) must reproduce the
+    full-horizon run bit-for-bit across all five IO models with writes and
+    refresh enabled — only the chunks_run diagnostic may differ."""
+    specs = [WorkloadSpec("wrh", 30.0, 0.4, write_frac=0.5),
+             WorkloadSpec("rd", 12.0, 0.6, write_frac=0.1)]
+    for name, sc in paper_configs(4).items():
+        sc = dataclasses.replace(sc, t_refi_ns=400.0)
+        traces = core_traces(7, specs, N_REQ, sc.n_ranks, sc.banks_per_rank)
+        full = engine.simulate(sc, traces, HORIZON, chunk=None)
+        assert int(full["n_wr"]) > 0 and int(full["refresh_cycles"]) > 0
+        for chunk in (250, 1024, HORIZON + 500):
+            got = engine.simulate(sc, traces, HORIZON, chunk=chunk)
+            assert set(got) == set(full)
+            for k in full:
+                if k == "chunks_run":
+                    continue
+                assert np.array_equal(np.asarray(got[k]),
+                                      np.asarray(full[k])), (name, chunk, k)
+            n_max = -(-HORIZON // min(chunk, HORIZON))
+            assert 1 <= int(got["chunks_run"]) <= n_max, (name, chunk)
+
+
+def test_early_exit_runs_fewer_chunks():
+    """A fast cascaded-MLR cell must terminate on measured completion,
+    strictly before the horizon allows — and the same cell inside a
+    stacked sweep batch must report the identical chunks_run."""
+    sc = paper_configs(4)["cascaded_mlr"]
+    cell = sweep.make_cell("fast", sc, FAST_SPECS, N_REQ, seed=3)
+    chunk = 256
+    m = engine.simulate(sc, cell.traces, HORIZON, chunk=chunk)
+    assert bool(np.asarray(m["complete"]).all())
+    n_max = -(-HORIZON // chunk)
+    assert 1 <= int(m["chunks_run"]) < n_max
+    res = sweep.run_sweep(sweep.SweepSpec((cell,), HORIZON, chunk=chunk))
+    assert int(np.asarray(res["fast"]["chunks_run"])) == int(m["chunks_run"])
+
+
+def test_makespan_buckets_decouple_fast_from_slow():
+    """In one sweep over a slow arrival-limited baseline cell and fast
+    cascaded cells, the fast cells must exit in fewer chunks than the slow
+    one — the bucketing keeps them off the slow cell's barrier — while
+    every cell stays bit-identical to its standalone simulate()."""
+    cfgs = paper_configs(4)
+    slow_spec = [WorkloadSpec("slow", 0.5, 0.6)] * 2      # arrival-limited
+    cells = [sweep.make_cell("slow", cfgs["baseline"], slow_spec,
+                             N_REQ, seed=1)]
+    for i in range(3):
+        cells.append(sweep.make_cell(f"fast{i}", cfgs["cascaded_mlr"],
+                                     FAST_SPECS, N_REQ, seed=i))
+    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), HORIZON, chunk=256))
+    for cell in cells:
+        ref = engine.simulate(cell.stack, cell.traces, HORIZON, chunk=256)
+        _assert_cell_equal(cell.name, res[cell.name], ref)
+    slow_chunks = int(np.asarray(res["slow"]["chunks_run"]))
+    for i in range(3):
+        assert int(np.asarray(res[f"fast{i}"]["chunks_run"])) < slow_chunks
+
+
+def test_makespan_estimate_orders_io_models():
+    """For a memory-bound workload the analytic estimate must rank the
+    slow group (bus-bound baseline, bank-bound single-rank MLR) above the
+    fast SLR configs — the measured chunk counts show exactly that split,
+    and that ordering is all the bucketing relies on."""
+    spec = [WorkloadSpec("hot", 60.0, 0.5)] * 2
+    est = {}
+    for name, sc in paper_configs(4).items():
+        traces = core_traces(0, spec, N_REQ, sc.n_ranks, sc.banks_per_rank)
+        est[name] = estimate_service_cycles(sc, traces)
+    for slow in ("baseline", "dedicated_mlr", "cascaded_mlr"):
+        for fast in ("dedicated_slr", "cascaded_slr"):
+            assert est[slow] > est[fast], (slow, fast)
+    assert all(v > 0 for v in est.values())
+
+
+def test_default_horizon_covers_makespan():
+    """The derived horizon must be generous enough that every cell of a
+    small grid completes its fixed work inside it (the whole point: the
+    horizon is a safety net, early exit supplies the speed)."""
+    cells = tuple(sweep.make_cell(n, sc, SPECS, N_REQ, seed=5)
+                  for n, sc in paper_configs(4).items())
+    horizon = default_horizon(cells)
+    assert horizon % engine.DEFAULT_CHUNK == 0
+    res = sweep.run_sweep(sweep.SweepSpec(cells, horizon))
+    for name in res.names:
+        assert bool(np.asarray(res[name]["complete"]).all()), name
+
+
+def test_chunking_and_bucketing_keep_compile_count():
+    """Bucketed chunked execution must still cost at most one compile per
+    static shape group: every bucket shares one padded shape."""
+    cells = []
+    for L in (2, 4):
+        for name, sc in paper_configs(L).items():
+            cells.append(sweep.make_cell(f"L{L}/{name}", sc, SPECS,
+                                         N_REQ, seed=7))
+    spec = sweep.SweepSpec(tuple(cells), HORIZON)
+    c0 = engine.compile_count()
+    sweep.run_sweep(spec)
+    assert engine.compile_count() - c0 <= 1
+    engine.reset_compile_count()
+    sweep.run_sweep(spec)                        # cached across calls
+    assert engine.compile_count() == 0
+
+
+def test_sweep_multi_device_shards_cells():
+    """With 2 forced host devices the stacked cell axis is sharded; the
+    results must stay bit-identical to the single-device per-cell path."""
+    code = """
+import numpy as np
+import jax
+from repro.core.smla import engine, sweep
+from repro.core.smla.config import paper_configs
+from repro.core.smla.traces import WorkloadSpec
+
+assert len(jax.devices()) == 2, jax.devices()
+SPECS = [WorkloadSpec("a", 25.0, 0.5, write_frac=0.3),
+         WorkloadSpec("b", 10.0, 0.6, write_frac=0.1)]
+cells = tuple(sweep.make_cell(n, sc, SPECS, 60, seed=3)
+              for n, sc in paper_configs(4).items())
+res = sweep.run_sweep(sweep.SweepSpec(cells, 3000, chunk=256))
+for cell in cells:
+    ref = engine.simulate(cell.stack, cell.traces, 3000, chunk=256)
+    for k in ref:
+        a = np.asarray(res[cell.name][k])
+        b = np.asarray(ref[k])
+        assert np.array_equal(a, b), (cell.name, k, a, b)
+print("SHARDED-OK")
+"""
+    out = run_subprocess_jax(code, n_devices=2)
+    assert "SHARDED-OK" in out
+
+
+# ----------------------------------------------------------------------------
+# scalars() coercion
+# ----------------------------------------------------------------------------
+
+def test_scalars_includes_chunks_run():
+    cells = tuple(sweep.make_cell(n, sc, SPECS, N_REQ, seed=5)
+                  for n, sc in paper_configs(4).items())
+    res = sweep.run_sweep(sweep.SweepSpec(cells, HORIZON))
+    tab = res.scalars()
+    assert "chunks_run" in tab
+    assert tab["chunks_run"].shape == (len(cells),)
+    assert (tab["chunks_run"] >= 1).all()
+
+
+def test_scalars_rejects_per_core_metrics_clearly():
+    cells = (sweep.make_cell("one", paper_configs(4)["baseline"], SPECS,
+                             N_REQ, seed=5),)
+    res = sweep.run_sweep(sweep.SweepSpec(cells, HORIZON))
+    with pytest.raises(ValueError, match="per-core"):
+        res.scalars(keys=("ipc",))
+    # size-1 arrays (e.g. a metric wrapped in an extra axis) still coerce
+    res.cells[0]["wrapped"] = np.array([1.5])
+    assert res.scalars(keys=("wrapped",))["wrapped"][0] == 1.5
