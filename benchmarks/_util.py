@@ -40,33 +40,47 @@ def _jsonable(x: Any) -> Any:
     return x
 
 
-def perf_block(wall_s: float, res, horizon: int,
-               chunk: int | None) -> dict:
+def perf_block(wall_s: float, res, horizon: int) -> dict:
     """Machine-readable perf summary for one figure's sweep, so early-exit
     gains are comparable across commits.
 
     res: a `SweepResult`.  Reports wall time, throughput (cells/s and
     simulated fast-cycles/s, where a cell's simulated cycles are the
-    chunks it actually ran), and how much of the horizon the early exit
-    saved (`chunks_run_total` vs `chunks_possible`)."""
+    chunks it actually ran times its bucket's chunk width), how much of
+    the horizon the early exit saved (`chunks_run_total` vs
+    `chunks_possible`, both respecting per-bucket adaptive widths —
+    `cell_n_chunks_max` is per cell), and the estimate calibration: per
+    bucket, the analytic `estimate_service_cycles` upper bound next to
+    the measured makespan (`measured_over_est` drifting toward/past 1.0
+    flags an engine change outrunning the estimate)."""
     from repro.core.smla import engine
-    chunk_eff = engine.effective_chunk(horizon, chunk)
-    n_chunks_max = engine.n_chunks(horizon, chunk)
     chunks = np.array([int(np.asarray(c["chunks_run"])) for c in res.cells])
-    sim_cycles = int(np.minimum(chunks * chunk_eff, horizon).sum())
-    possible = n_chunks_max * len(chunks)
+    widths = np.array([int(w) for w in res.chunks] if res.chunks
+                      else [engine.effective_chunk(horizon, None)]
+                      * len(chunks))
+    n_max = np.array([engine.n_chunks(horizon, int(w)) for w in widths])
+    sim_cycles = int(np.minimum(chunks * widths, horizon).sum())
+    possible = int(n_max.sum())
     wall = max(wall_s, 1e-9)
+    calibration = [
+        {"chunk": m["chunk"], "n_cells": len(m["cells"]),
+         "est_max": round(m["est_max"], 1),
+         "measured_max": round(m["measured_max"], 1),
+         "measured_over_est": round(
+             m["measured_max"] / max(m["est_max"], 1e-9), 4)}
+        for m in res.buckets]
     return {
         "wall_s": round(wall_s, 3),
         "cells_per_s": round(len(chunks) / wall, 3),
         "sim_fast_cycles": sim_cycles,
         "sim_fast_cycles_per_s": round(sim_cycles / wall, 1),
         "horizon": horizon,
-        "chunk": chunk_eff,
-        "n_chunks_max": n_chunks_max,
+        "chunk_widths": sorted({int(w) for w in widths}),
+        "cell_n_chunks_max": [int(x) for x in n_max],
         "chunks_run_total": int(chunks.sum()),
         "chunks_possible": possible,
-        "early_exit_frac": round(1.0 - chunks.sum() / possible, 4),
+        "early_exit_frac": round(1.0 - chunks.sum() / max(possible, 1), 4),
+        "calibration": calibration,
     }
 
 

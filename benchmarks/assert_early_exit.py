@@ -1,13 +1,16 @@
 """CI gate: the chunked sweep engine's early exit must actually engage.
 
-Reads the fig11 section of `BENCH_smla_sweep.json` (written by
-`benchmarks/run.py --smoke` just before this runs) and fails unless at
-least one non-baseline cell ran strictly fewer chunks than the horizon
-allows — i.e. the while-loop terminated on measured completion, not on the
-horizon.  A regression that silently turns early exit back into
-fixed-horizon scanning (wrong exit predicate, chunks_run plumbing dropped,
-bucketing collapsing to one barrier) fails here even while all
-bit-identity tests still pass.
+Reads the fig11 and fig_policy sections of `BENCH_smla_sweep.json`
+(written by `benchmarks/run.py --smoke` just before this runs) and fails
+unless, in each, at least one non-baseline cell ran strictly fewer chunks
+than its bucket's horizon allows — i.e. the while-loop terminated on
+measured completion, not on the horizon.  Chunk widths are per-bucket
+(the auto ladder), so the bound is per cell (`perf.cell_n_chunks_max`).
+A regression that silently turns early exit back into fixed-horizon
+scanning (wrong exit predicate, chunks_run plumbing dropped, bucketing
+collapsing to one barrier) — or that stops the policy sweep from
+emitting its perf block — fails here even while all bit-identity tests
+still pass.
 """
 from __future__ import annotations
 
@@ -17,31 +20,38 @@ import sys
 
 from benchmarks._util import BENCH_JSON_DEFAULT, BENCH_JSON_ENV
 
+GATED_FIGURES = ("fig11", "fig_policy")
+
+
+def check_figure(name: str, data: dict) -> str | None:
+    """None on success, else the failure message."""
+    fig = data.get(name)
+    if not fig or "perf" not in fig or "scalars" not in fig:
+        return f"no {name} perf/scalars section"
+    names = fig["cell_names"]
+    chunks = fig["scalars"]["chunks_run"]
+    n_max = fig["perf"]["cell_n_chunks_max"]
+    early = [(n, int(c), int(m)) for n, c, m in zip(names, chunks, n_max)
+             if "/baseline/" not in n and int(c) < int(m)]
+    if not early:
+        return (f"{name}: no non-baseline cell exited before the horizon "
+                f"— early exit is not engaging")
+    frac = fig["perf"]["early_exit_frac"]
+    print(f"assert_early_exit: {name} OK — {len(early)} non-baseline cells "
+          f"exited early (e.g. {early[0][0]} after {early[0][1]}/"
+          f"{early[0][2]} chunks); sweep-wide {frac:.0%} of chunks saved")
+    return None
+
 
 def main() -> int:
     path = os.environ.get(BENCH_JSON_ENV, BENCH_JSON_DEFAULT)
     with open(path) as f:
         data = json.load(f)
-    fig = data.get("fig11")
-    if not fig or "perf" not in fig or "scalars" not in fig:
-        print(f"assert_early_exit: no fig11 perf/scalars in {path}",
-              file=sys.stderr)
-        return 1
-    n_chunks_max = int(fig["perf"]["n_chunks_max"])
-    names = fig["cell_names"]
-    chunks = fig["scalars"]["chunks_run"]
-    early = [(n, int(c)) for n, c in zip(names, chunks)
-             if "/baseline/" not in n and int(c) < n_chunks_max]
-    if not early:
-        print(f"assert_early_exit: no non-baseline cell exited before the "
-              f"horizon ({n_chunks_max} chunks) — early exit is not "
-              f"engaging", file=sys.stderr)
-        return 1
-    frac = fig["perf"]["early_exit_frac"]
-    print(f"assert_early_exit: OK — {len(early)} non-baseline cells exited "
-          f"early (e.g. {early[0][0]} after {early[0][1]}/{n_chunks_max} "
-          f"chunks); sweep-wide {frac:.0%} of chunks saved")
-    return 0
+    failures = [msg for msg in (check_figure(name, data)
+                                for name in GATED_FIGURES) if msg]
+    for msg in failures:
+        print(f"assert_early_exit: {msg} ({path})", file=sys.stderr)
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

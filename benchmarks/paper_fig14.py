@@ -39,7 +39,9 @@ def run(n_req: int = 500, horizon: int | None = None) -> list[str]:
     res = sweep.run_sweep(spec)
     wall = time.perf_counter() - t0
     compiles = engine.compile_count() - c0
-    assert compiles <= 1, f"fig14 grid took {compiles} compiles (want <= 1)"
+    assert compiles <= len(set(res.chunks)), \
+        f"fig14 grid took {compiles} compiles " \
+        f"(want <= {len(set(res.chunks))} chunk widths)"
 
     def energy(cname, wname):
         return energy_from_metrics(cfgs[cname],
@@ -67,7 +69,7 @@ def run(n_req: int = 500, horizon: int | None = None) -> list[str]:
                 f"dio {rels_d[0]:.3f}->{rels_d[-1]:.3f}, "
                 f"cio {rels_c[0]:.3f}->{rels_c[-1]:.3f} "
                 f"(paper: overhead decays, CIO ~30% below DIO)")
-    perf = perf_block(wall, res, horizon, spec.chunk)
+    perf = perf_block(wall, res, horizon)
     rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
                 f"{wall:.1f}s wall, early-exit saved "
                 f"{perf['early_exit_frac']:.0%} of chunks")

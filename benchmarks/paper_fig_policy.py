@@ -1,0 +1,140 @@
+"""Controller-policy sensitivity sweep (beyond the paper's fixed
+controller) across all five IO models.
+
+The paper evaluates one memory controller — FR-FCFS, open-page, all-bank
+refresh, writes inline.  This figure sweeps the controller-policy
+cross-product (`core/smla/policies.POLICY_PRESETS`: the default plus one
+single-axis flip per dimension plus the all-flipped corner) over every IO
+model x a read-mostly and a write-heavy workload, and reports each
+policy's weighted speedup and energy *relative to the same IO model under
+the default policy* — i.e. how sensitive each SMLA organisation is to the
+controller in front of it.
+
+The whole (config x workload x policy) grid is ONE shape group: policy
+selectors are traced integers, so the policy axis multiplies cells
+without multiplying compiles (asserted below via compile_count deltas —
+at most one compile per auto-chunk ladder width).
+"""
+import time
+
+import numpy as np
+
+from benchmarks._util import emit_json, perf_block, scaled
+from repro.core.smla import engine, policies, sweep
+from repro.core.smla.analytic import default_horizon
+from repro.core.smla.config import paper_configs
+from repro.core.smla.energy import energy_from_metrics
+from repro.core.smla.traces import WORKLOADS
+
+#: one read-mostly low-MPKI and one write-heavy streaming workload — the
+#: two ends of the write-drain / row-policy sensitivity range
+WORKLOAD_IDS = (4, 26)                     # low.05, stream.1
+
+
+def run(n_req: int = 400, horizon: int | None = None,
+        seed: int = 0) -> list[str]:
+    n_req = scaled(n_req, 80)
+    cfgs = paper_configs(4)
+    wls = [WORKLOADS[i] for i in WORKLOAD_IDS]
+    cells = sweep.paper_grid([(w.name, [w, w], seed) for w in wls],
+                             layers=(4,), n_req=n_req)
+    presets = policies.POLICY_PRESETS
+    if horizon is None:
+        # smoke keeps a pinned tiny horizon for cross-commit
+        # comparability (cells may not complete — `complete_frac` says
+        # which rows to trust); full runs derive the analytic worst case
+        # over the POLICY-EXPANDED grid, so e.g. per-bank refresh cells
+        # get their own (lighter) refresh inflation
+        horizon = scaled(default_horizon(
+            sweep.policy_cells(cells, tuple(presets.values()))), 6_000)
+
+    spec = sweep.SweepSpec(tuple(cells), horizon,
+                           policies=tuple(presets.values()))
+    c0, t0 = engine.compile_count(), time.perf_counter()
+    res = sweep.run_sweep(spec)
+    wall = time.perf_counter() - t0
+    compiles = engine.compile_count() - c0
+    bound = max(len(set(res.chunks)), 1)
+    assert compiles <= bound, \
+        f"policy axis multiplied compiles: {compiles} (want <= {bound} " \
+        f"chunk widths — selectors must stay traced)"
+
+    def metrics(cname, wname, tag):
+        return res[f"L4/{cname}/{wname}|{tag}"]
+
+    rows = ["config,policy,ws_vs_default,energy_vs_default,"
+            "acts_per_req,rank_blocked_frac,complete_frac"]
+    table = []
+    n_incomplete = 0
+    for cname in cfgs:
+        for pname, pol in presets.items():
+            tag = pol.tag
+            ws, erel, apr, blocked, compl = [], [], [], [], []
+            for w in wls:
+                base = metrics(cname, w.name, "default")
+                m = metrics(cname, w.name, tag)
+                ws.append(float(np.mean(
+                    m["ipc"] / np.maximum(base["ipc"], 1e-9))))
+                base_e = energy_from_metrics(cfgs[cname], base).total_nj
+                erel.append(
+                    energy_from_metrics(cfgs[cname], m).total_nj / base_e)
+                served = max(int(np.asarray(m["served"]).sum()), 1)
+                apr.append(int(m["n_act"]) / served)
+                mk_cyc = max(float(m["makespan_ns"])
+                             / cfgs[cname].unit_ns, 1.0)
+                blocked.append(int(m["ref_rank_blocked_cycles"])
+                               / (mk_cyc * cfgs[cname].n_ranks))
+                done = bool(np.asarray(m["complete"]).all())
+                compl.append(float(done))
+                n_incomplete += not done
+            vals = dict(config=cname, policy=pname,
+                        ws=float(np.mean(ws)), energy=float(np.mean(erel)),
+                        acts_per_req=float(np.mean(apr)),
+                        rank_blocked_frac=float(np.mean(blocked)),
+                        complete_frac=float(np.mean(compl)))
+            table.append(vals)
+            rows.append(f"{cname},{pname},{vals['ws']:.3f},"
+                        f"{vals['energy']:.3f},{vals['acts_per_req']:.3f},"
+                        f"{vals['rank_blocked_frac']:.4f},"
+                        f"{vals['complete_frac']:.2f}")
+    rows.append("# default = the paper's controller (FR-FCFS, open-page, "
+                "all-bank refresh, inline writes); ws/energy are relative "
+                "to it per IO model.  complete_frac < 1 (smoke's pinned "
+                "horizon) means that row's ipc is horizon-truncated — "
+                "trend-only; full runs derive a policy-aware horizon and "
+                "complete every cell")
+    perf = perf_block(wall, res, horizon)
+    rows.append(f"# sweep: {len(res.names)} cells "
+                f"({len(cells)} x {len(presets)} policies), {compiles} "
+                f"compiles, {wall:.1f}s wall, early-exit saved "
+                f"{perf['early_exit_frac']:.0%} of chunks")
+    scal = res.scalars()
+    emit_json("fig_policy", {
+        "n_req": n_req, "horizon": horizon, "n_cells": len(res.names),
+        "n_policies": len(presets), "compiles": compiles,
+        "n_incomplete": n_incomplete,
+        "wall_s": round(wall, 2), "perf": perf,
+        "policy_tags": {k: v.tag for k, v in presets.items()},
+        "rows": table,
+        "scalars": {k: v for k, v in scal.items() if k != "name"},
+        "cell_names": list(res.names),
+    })
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (same as SMLA_SMOKE=1)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["SMLA_SMOKE"] = "1"
+    print("\n".join(run()))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,6 +21,7 @@ BENCHES = [
     "benchmarks.paper_fig12",         # multi-core weighted speedup + energy
     "benchmarks.paper_fig13",         # layer-count sensitivity 2/4/8
     "benchmarks.paper_fig14",         # MPKI vs energy
+    "benchmarks.paper_fig_policy",    # controller-policy sensitivity
     "benchmarks.collective_schedules",# cascaded vs dedicated cross-pod sync
     "benchmarks.smla_pipe_bench",     # SMLA pipeline kernel
     "benchmarks.serve_policies",      # MLR vs SLR serving placement

@@ -10,8 +10,10 @@ import numpy as np
 
 from repro.core.smla import energy as energy_mod
 from repro.core.smla import engine as engine_mod
+from repro.core.smla import policies as policies_mod
 from repro.core.smla import sweep as sweep_mod
-from repro.core.smla.config import IOModel, RankOrg, StackConfig, paper_configs
+from repro.core.smla.config import (IOModel, RankOrg, RefreshGranularity,
+                                    StackConfig, paper_configs)
 from repro.core.smla.engine import CoreParams, simulate
 from repro.core.smla.traces import WORKLOADS, WorkloadSpec, core_traces
 
@@ -22,38 +24,68 @@ from repro.core.smla.traces import WORKLOADS, WorkloadSpec, core_traces
 
 def _timing_view(stack: StackConfig) -> tuple[float, float, float, float]:
     """(activate+CAS latency, mean transfer, max transfer, refresh factor)
-    in fast cycles for `stack`."""
+    in fast cycles for `stack`, under its controller policy.
+
+    Closed-page pays the same per-access total (the precharge trails the
+    access instead of preceding it), so `lat` is policy-independent.
+    Per-bank refresh blocks one bank for the shorter tRFCpb ~= tRFC/2
+    instead of the whole rank for tRFC, so its unavailability factor is
+    correspondingly lighter — keeping the estimate tight enough that
+    per-bank cells land in faster buckets."""
     R = stack.n_ranks
     dur = np.array([stack.transfer_cycles(r) for r in range(R)], float)
     lat = float(stack.t_rp + stack.t_rcd + stack.t_cl)
     t_refi, t_rfc = float(stack.t_refi), float(stack.t_rfc)
+    if stack.policy.refresh_gran == RefreshGranularity.PER_BANK:
+        t_rfc = float(policies_mod.t_rfc_per_bank(stack.t_rfc))
     refresh = 1.0
     if t_refi > 0:
-        # each rank is unavailable tRFC out of every tREFI
+        # each rank (all-bank) / bank (per-bank) is unavailable t_rfc out
+        # of every tREFI
         refresh = t_refi / max(t_refi - t_rfc, 1.0)
     return lat, float(dur.mean()), float(dur.max()), refresh
 
 
+def _write_frac(traces: dict) -> float:
+    wr = traces.get("wr")
+    return float(np.asarray(wr).mean()) if wr is not None else 0.0
+
+
 def estimate_service_cycles(stack: StackConfig, traces: dict,
                             core: CoreParams = CoreParams()) -> float:
-    """Cheap closed-form estimate of the fixed-work makespan (fast cycles).
+    """Cheap closed-form *upper* estimate of the fixed-work makespan
+    (fast cycles).
 
-    max of the three first-order bottlenecks — bus occupancy per group,
-    activate latency per bank, and the core-side arrival span — plus one
-    request latency of tail, inflated by the refresh-unavailability
-    factor.  Used by `sweep.run_sweep` to *order* cells into makespan
-    buckets, so relative accuracy across configs is what matters, not
-    absolute accuracy."""
+    Three additive phases bound the makespan from above: the core-side
+    arrival span (compute between misses at peak IPC), the per-core
+    stall chain (every miss fully serialised against its own core —
+    the window limiter cannot cover the inter-miss instruction gap for
+    low-MPKI workloads, so each miss stalls for activate + transfer +
+    write recovery/turnaround), and the worse of the two shared-resource
+    queues (bus occupancy per group incl. the write-to-read turnaround
+    each write arms, activate latency per bank incl. write recovery) —
+    plus one request latency of tail, inflated by the refresh-
+    unavailability factor.  Used by `sweep.run_sweep` to *order* cells
+    into makespan buckets and to derive per-bucket chunk widths, so
+    relative accuracy across configs is what matters most — but the
+    default paper grid also pins it as a true upper bound on the
+    measured makespan (`tests/test_sweep.py::
+    test_estimate_upper_bounds_default_grid`), so engine changes that
+    break the bound are flagged, not absorbed."""
     n_cores, n_req = np.shape(traces["inst"])
     total = n_cores * n_req
     lat, dur_mean, dur_max, refresh = _timing_view(stack)
+    wr = _write_frac(traces)
+    wr_cost = wr * (stack.t_wr + stack.t_wtr)
     n_groups = (1 if stack.io_model == IOModel.BASELINE
                 or stack.rank_org == RankOrg.MLR else stack.n_ranks)
-    bus = total * dur_mean / max(n_groups, 1)
-    bank = total * lat / max(stack.banks_total, 1)
+    bus = total * (dur_mean + wr * stack.t_wtr) / max(n_groups, 1)
+    bank = total * (lat + wr * stack.t_wr) / max(stack.banks_total, 1)
     arrival = float(np.max(np.asarray(traces["inst"])[:, -1])) \
         / core.inst_per_fast_cycle
-    return (max(bus, bank, arrival) + lat + dur_max) * refresh
+    core_serial = n_req * (lat + dur_max + wr_cost)
+    return (arrival + core_serial + max(bus, bank)
+            + lat + dur_max) * refresh
 
 
 def default_horizon(cells: Sequence["sweep_mod.SweepCell"],
@@ -73,7 +105,10 @@ def default_horizon(cells: Sequence["sweep_mod.SweepCell"],
         lat, _, dur_max, refresh = _timing_view(c.stack)
         arrival = float(np.max(np.asarray(c.traces["inst"])[:, -1])) \
             / core.inst_per_fast_cycle
-        serial = n_cores * n_req * (lat + dur_max)
+        # +tWR+tWTR per request: a fully serialised write stream pays the
+        # recovery and turnaround on top of activate + transfer
+        serial = n_cores * n_req * (lat + dur_max
+                                    + c.stack.t_wr + c.stack.t_wtr)
         worst = max(worst, (arrival + serial) * refresh)
     chunk = engine_mod.DEFAULT_CHUNK
     return max(chunk, -(-int(worst * margin) // chunk) * chunk)

@@ -27,6 +27,68 @@ class RankOrg(enum.IntEnum):
     SLR = 1           # Single-Layer Rank: each layer is a rank
 
 
+# ----------------------------------------------------------------------------
+# controller policy (the paper fixes FR-FCFS / open-page / all-bank refresh;
+# these selectors open the policy cross-product the engine can sweep as
+# *traced* integers — changing a policy never recompiles)
+# ----------------------------------------------------------------------------
+
+class SchedPolicy(enum.IntEnum):
+    FR_FCFS = 0       # row hits first, then oldest (the paper's controller)
+    FCFS = 1          # strictly oldest-first, row state ignored
+
+
+class RowPolicy(enum.IntEnum):
+    OPEN_PAGE = 0     # rows stay open after access (the paper's controller)
+    CLOSED_PAGE = 1   # auto-precharge after every access; zero row hits
+
+
+class RefreshGranularity(enum.IntEnum):
+    ALL_BANK = 0      # per-rank all-bank refresh: whole rank drains + blacks out
+    PER_BANK = 1      # round-robin per-bank refresh; other banks keep serving
+                      # (NOM-style inter-bank window, arXiv:2004.09923)
+
+
+class WriteDrainPolicy(enum.IntEnum):
+    INLINE = 0        # writes compete with reads immediately (the paper)
+    DRAIN_WHEN_FULL = 1   # hold writes until a high watermark, then drain
+                          # (writes prioritised) down to the low watermark
+    OPPORTUNISTIC = 2     # issue writes above the low watermark or whenever
+                          # no read is issuable (bus would otherwise idle)
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerPolicy:
+    """One point of the controller-policy cross-product.
+
+    The default value reproduces the paper's fixed controller exactly —
+    the engine is bit-identical to the pre-policy implementation under it.
+    """
+    scheduler: SchedPolicy = SchedPolicy.FR_FCFS
+    row: RowPolicy = RowPolicy.OPEN_PAGE
+    refresh_gran: RefreshGranularity = RefreshGranularity.ALL_BANK
+    write_drain: WriteDrainPolicy = WriteDrainPolicy.INLINE
+
+    @property
+    def is_default(self) -> bool:
+        return self == ControllerPolicy()
+
+    @property
+    def tag(self) -> str:
+        """Compact cell-name suffix, e.g. 'fcfs-closed-pb-oppdrain'."""
+        if self.is_default:
+            return "default"
+        sched = {SchedPolicy.FR_FCFS: "frfcfs", SchedPolicy.FCFS: "fcfs"}
+        row = {RowPolicy.OPEN_PAGE: "open", RowPolicy.CLOSED_PAGE: "closed"}
+        ref = {RefreshGranularity.ALL_BANK: "ab",
+               RefreshGranularity.PER_BANK: "pb"}
+        drain = {WriteDrainPolicy.INLINE: "inline",
+                 WriteDrainPolicy.DRAIN_WHEN_FULL: "fulldrain",
+                 WriteDrainPolicy.OPPORTUNISTIC: "oppdrain"}
+        return "-".join((sched[self.scheduler], row[self.row],
+                         ref[self.refresh_gran], drain[self.write_drain]))
+
+
 @dataclasses.dataclass(frozen=True)
 class StackConfig:
     """One 3D-stacked DRAM channel (paper Table 2 global parameters)."""
@@ -56,6 +118,11 @@ class StackConfig:
     # in power-down (Table 1's 0.24 mA state) until its next use.
     pd_idle_ns: float = 30.0
     vdd: float = 1.2
+    # Controller policy (scheduler x row policy x refresh granularity x
+    # write drain).  The default reproduces the paper's fixed controller;
+    # every selector is *traced* by the engine, so sweeping the policy
+    # cross-product reuses the same compiled program.
+    policy: ControllerPolicy = ControllerPolicy()
 
     # ---- derived quantities -------------------------------------------------
     @property
@@ -179,6 +246,12 @@ class StackConfig:
             "slotted": np.bool_(slotted),
             "unit_ns": np.float32(self.unit_ns),
             "request_bytes": np.float32(self.request_bytes),
+            # controller-policy selectors — traced, never part of the
+            # compile key (see core/smla/policies.py)
+            "sched_sel": np.int32(int(self.policy.scheduler)),
+            "row_sel": np.int32(int(self.policy.row)),
+            "ref_sel": np.int32(int(self.policy.refresh_gran)),
+            "drain_sel": np.int32(int(self.policy.write_drain)),
         }
 
     @property

@@ -4,50 +4,60 @@ as a vectorised scan over fast cycles with chunked early exit.
 Time unit: one *fast cycle* = 1 / (L * F)  (1.25 ns for the paper's 4-layer,
 200 MHz Wide-IO baseline) — every Table-2 quantity is an integer multiple.
 
-Modelled per channel:
-* banks: open row + busy-until, tRP/tRCD/tCL from StackConfig,
-* FR-FCFS controller (row hits first, then oldest; one command per cycle),
-* writes: per-request `wr` trace bit; a write's data transfer extends its
-  bank by tWR (write recovery) and blocks the next *read* start on the same
-  bus group for tWTR (write-to-read turnaround).  Write bus occupancy is
-  accounted separately (`wr_bus_cycles`).
-* refresh: per-rank tREFI counter; when due, new CAS issue to that rank is
-  blocked until its banks drain, then the rank refreshes for tRFC (rows
-  close, transfers of that rank stall).  tREFI == 0 disables refresh — every
-  refresh code path is then an exact no-op.
-* power-down: a rank idle (no busy bank, no queued request) for t_pd
-  consecutive cycles is counted in power-down; `pd_cycles` accumulates
-  rank-cycles in that state while work remains, so `energy.stack_energy`
-  can price Table 1's 0.24 mA power-down current with a *measured*
-  residency instead of an assumed one.
-* IO models (paper §4/§5):
-    BASELINE        one full-width bus, one rank at a time, 4L cycles/req
-    DEDICATED MLR   full-width transfer at L*F: L cycles/req (5 ns)
-    DEDICATED SLR   per-rank W/L-wide dedicated group: 4L cycles/req (20 ns)
-    CASCADED  MLR   full bus time slots: L cycles/req
-    CASCADED  SLR   rank r owns slot (t mod L == r): (beats-1)*L+1 cycles
-* cores: 3-wide 3.2 GHz, MSHR-limited, instruction-window runahead —
-  the paper's Table-3 core model.  IPC is measured in core cycles.
+The per-cycle step is a fixed pipeline of composable **stage functions**
+(`_STAGES`), each taking and returning the scan state plus a per-cycle
+`aux` dict of transients:
 
-Every per-config quantity the step function needs — timing vector
-(tRCD/tRP/tCL/tWR/tWTR/tREFI/tRFC/t_pd), per-rank transfer durations,
-bus-group map, slotted flag, layer count, actual rank/request counts — is a
-*traced* input (see ``StackConfig.to_params``), not a Python closure
-constant.  Only array shapes are static, so one jitted program serves every
-configuration with the same padded shapes, and ``sweep.run_sweep`` can vmap
-it over a stacked (config, workload) cell axis.  Compiled executables are
-cached per static signature; ``compile_count()`` exposes the number of
-distinct compiles for benchmark assertions and ``reset_compile_count()``
-rebases it (tests assert on deltas, never absolutes).
+    refresh -> enqueue -> schedule -> transfer -> retire -> progress -> power
+
+* `_stage_refresh`   per-rank tREFI counters; a due rank (all-bank) or its
+  round-robin target bank (per-bank) drains, then refreshes for tRFC —
+  rows close, transfers stall.  tREFI == 0 disables refresh exactly.
+* `_stage_enqueue`   round-robin one core per cycle into the controller
+  queue (depth `CoreParams.q_size`; a full queue stalls the core — no
+  request is ever dropped).
+* `_stage_schedule`  one CAS per cycle, picked by the scheduler policy
+  (FR-FCFS row hits first, or strict FCFS) over the row policy's bank
+  state (open-page keeps rows open; closed-page auto-precharges — zero
+  row hits, structurally) under the write-drain policy's eligibility
+  (inline, drain-when-full burst, or opportunistic low-watermark).
+* `_stage_transfer`  one bus start per group per cycle; cascaded-SLR time
+  slots, write recovery (tWR) and write-to-read turnaround (tWTR).
+* `_stage_retire`    completed transfers retire; MSHRs free.
+* `_stage_progress`  3-wide 3.2 GHz cores, MSHR-limited, instruction-
+  window runahead (the paper's Table-3 core model).
+* `_stage_power`     power-down residency: a rank idle t_pd consecutive
+  cycles accumulates `pd_cycles`, so `energy.stack_energy` prices
+  Table 1's 0.24 mA with a *measured* residency.
+
+IO models (paper §4/§5): BASELINE (one full-width bus, 4L cycles/req),
+DEDICATED MLR (L cycles), DEDICATED SLR (per-rank W/L group, 4L cycles),
+CASCADED MLR (full-bus time slots, L cycles), CASCADED SLR (rank r owns
+slot t mod L == r, (beats-1)*L+1 cycles).
+
+Every per-config quantity the stages need — timing vector, per-rank
+transfer durations, bus-group map, slotted flag, layer count, actual
+rank/request counts, **and the four controller-policy selectors** (see
+``core/smla/policies.py``) — is a *traced* input (``StackConfig.
+to_params``), not a Python closure constant.  Only array shapes are
+static, so one jitted program serves every configuration AND every point
+of the policy cross-product with the same padded shapes, and
+``sweep.run_sweep`` can vmap it over a stacked (config, workload, policy)
+cell axis.  With default policies the pipeline is bit-identical to the
+historical monolithic step — pinned by ``tests/golden/smla_small_grid.
+json``.  Compiled executables are cached per static signature;
+``compile_count()`` exposes the number of distinct compiles and
+``reset_compile_count()`` rebases it (tests assert deltas, never
+absolutes).
 
 Execution is *chunked*: instead of one fixed `lax.scan` over the full
 horizon, a `lax.while_loop` runs fixed-width scan chunks (``chunk`` fast
 cycles each, default ``DEFAULT_CHUNK``) and terminates as soon as every
 core has ``served >= n_req`` — so wall time is proportional to the
 simulated *makespan*, not to the horizon.  Steps past the horizon in the
-final partial chunk are gated to exact no-ops, and all fixed-work counters
-freeze once work completes (``work_left`` gating plus a per-core freeze of
-the instruction counter at completion), so chunked results are
+final partial chunk are gated to exact no-ops, and all fixed-work
+counters freeze once work completes (``work_left`` gating plus a per-core
+freeze of the instruction counter at completion), so chunked results are
 bit-identical to a full-horizon run for every metric.  The number of
 chunks actually executed is returned as the ``chunks_run`` diagnostic —
 the only metric allowed to depend on the chunk size.  Under `vmap`, JAX's
@@ -65,15 +75,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.smla import policies
 from repro.core.smla.config import StackConfig
-
-BIG = jnp.int32(2**30)
-Q_SIZE = 32
+from repro.core.smla.policies import BIG
 
 #: fast cycles per early-exit scan chunk; ``chunk=None`` disables chunking
 #: (one chunk spanning the whole horizon — the full-horizon reference run).
 #: 1024 measured best on the fig11 grid: fine enough exit granularity
-#: without noticeable while-loop dispatch overhead.
+#: without noticeable while-loop dispatch overhead.  ``sweep.run_sweep``
+#: additionally derives finer per-bucket widths for fast buckets
+#: (``SweepSpec.chunk="auto"``), clamped to this value.
 DEFAULT_CHUNK = 1024
 
 
@@ -96,11 +107,303 @@ class CoreParams:
     mshr: int = 8
     window: float = 128.0        # instruction-window runahead
     inst_per_fast_cycle: float = 12.0   # 3-wide * 3.2GHz * 1.25ns
+    #: controller request-queue depth (static: sizes the queue arrays).
+    #: A full queue stalls enqueue — requests are never dropped (invariant
+    #: tested in tests/test_policies.py).  Also feeds the write-drain
+    #: watermarks (`policies.drain_watermarks`: 3/4 and 1/4 of the
+    #: MSHR-reachable occupancy min(q_size, n_cores*mshr)).
+    q_size: int = 32
+
+
+# ----------------------------------------------------------------------------
+# pipeline stages
+#
+# Each stage is `(st, aux, t, ctx) -> (st, aux)`: `st` is the scan-carried
+# state (mutated via dict assignment on a per-step shallow copy), `aux`
+# holds per-cycle transients handed down the pipeline (work_left, the
+# refresh-due mask, ...), `ctx` the per-simulation constants: traced
+# params, trace arrays, policy selector views, static shape ints.
+# ----------------------------------------------------------------------------
+
+
+def _stage_refresh(st, aux, t, ctx):
+    """Refresh (before issue: a started refresh blocks its target).
+
+    All-bank (default): a due rank waits until it has no busy bank AND no
+    issued/granted request in flight (phase >= 2) — a refresh must not
+    close a row under an already-CAS'd request or start mid-data-burst —
+    then all its banks refresh for tRFC.  Per-bank: only the round-robin
+    target bank must drain; the rank's other banks keep scheduling and
+    transferring through the refresh (the NOM-style inter-bank window).
+    New CAS issue to the draining target is blocked in `_stage_schedule`,
+    so the drain completes in bounded time either way."""
+    R, B, pol = ctx["R"], ctx["B"], ctx["pol"]
+    qv, qphase, qr, qb = st["qv"], st["qphase"], st["qr"], st["qb"]
+    bank_busy, bank_row = st["bank_busy"], st["bank_row"]
+    ref_next, ref_until, ref_bank = (st["ref_next"], st["ref_until"],
+                                     st["ref_bank"])
+    t_rfc_eff, t_refi_eff = ctx["t_rfc_eff"], ctx["t_refi_eff"]
+
+    ref_due = ctx["refresh_en"] & (t >= ref_next) & ctx["real_rank"]
+    in_flight_q = jnp.where(qv & (qphase >= 2), 1, 0)
+    # all-bank drain condition: the whole rank idle, nothing in flight
+    bank_idle = (bank_busy <= t).all(axis=1)
+    in_flight = jax.ops.segment_sum(in_flight_q, qr, num_segments=R) > 0
+    start_ab = ref_due & bank_idle & ~in_flight
+    # per-bank drain condition: only the target bank idle / drained
+    in_flight_rb = jax.ops.segment_sum(in_flight_q, qr * B + qb,
+                                       num_segments=R * B).reshape(R, B)
+    ranks = jnp.arange(R, dtype=jnp.int32)
+    start_pb = ref_due & (bank_busy[ranks, ref_bank] <= t) \
+        & ~(in_flight_rb[ranks, ref_bank] > 0)
+    ref_start = jnp.where(pol["per_bank"], start_pb, start_ab)
+
+    covered = ref_start[:, None] & policies.refresh_bank_mask(
+        pol, ref_bank, B)
+    bank_busy = jnp.where(covered, t + t_rfc_eff, bank_busy)
+    bank_row = jnp.where(covered, -1, bank_row)          # rows close
+    ref_until = jnp.where(covered, t + t_rfc_eff, ref_until)
+    ref_next = jnp.where(ref_start, ref_next + t_refi_eff, ref_next)
+    st["ref_bank"] = jnp.where(ref_start & pol["per_bank"],
+                               (ref_bank + 1) % B, ref_bank)
+    # counters accumulate only while work remains, so fixed-work metrics
+    # cover the makespan, not the idle tail of the scan horizon.
+    st["refresh_cycles"] = st["refresh_cycles"] + jnp.where(
+        aux["work_left"], ref_start.sum() * t_rfc_eff, 0)
+    # rank-cycles with EVERY bank under refresh: the whole-rank blackout
+    # all-bank refresh imposes and per-bank refresh exists to avoid.
+    all_blocked = (ref_until > t).all(axis=1) & ctx["real_rank"]
+    st["ref_rank_blocked"] = st["ref_rank_blocked"] + jnp.where(
+        aux["work_left"], all_blocked.sum(), 0)
+
+    st.update(bank_busy=bank_busy, bank_row=bank_row,
+              ref_next=ref_next, ref_until=ref_until)
+    aux["ref_due"] = ref_due
+    aux["ref_target"] = ref_bank          # pre-increment round-robin target
+    return st, aux
+
+
+def _stage_enqueue(st, aux, t, ctx):
+    """Enqueue (round-robin one core per cycle).  A full queue or full
+    MSHR file stalls the core — `do_enq` stays False and the request is
+    retried next round; nothing is ever dropped."""
+    n_req, tr = ctx["n_req"], ctx["traces"]
+    cid = t % ctx["n_cores"]
+    nxt = st["c_next"][cid]
+    has_req = nxt < n_req
+    idx = jnp.minimum(nxt, n_req - 1)
+    arrived = tr["inst"][cid, idx] <= st["c_inst"][cid]
+    mshr_ok = st["c_out"][cid] < ctx["core"].mshr
+    free_slot = jnp.argmin(st["qv"])          # first False
+    slot_ok = ~st["qv"][free_slot]
+    do_enq = has_req & arrived & mshr_ok & slot_ok
+
+    def put(field, val):
+        cur = st[field]
+        st[field] = cur.at[free_slot].set(
+            jnp.where(do_enq, val, cur[free_slot]))
+
+    put("qv", True)
+    put("qc", cid)
+    put("qr", tr["rank"][cid, idx])
+    put("qb", tr["bank"][cid, idx])
+    put("qrow", tr["row"][cid, idx])
+    put("qinst", tr["inst"][cid, idx])
+    put("qarr", t)
+    put("qphase", 1)
+    put("qwr", tr["wr"][cid, idx])
+    st["c_next"] = st["c_next"].at[cid].add(jnp.where(do_enq, 1, 0))
+    st["c_out"] = st["c_out"].at[cid].add(jnp.where(do_enq, 1, 0))
+    return st, aux
+
+
+def _stage_schedule(st, aux, t, ctx):
+    """Scheduler: one CAS command per cycle.
+
+    Candidates are phase-1 entries whose bank is free and not blocked by
+    a due refresh (whole rank under all-bank, target bank under
+    per-bank).  The write-drain policy decides whether waiting writes are
+    eligible this cycle; the scheduler policy ranks candidates (FR-FCFS
+    row-hit bonus or plain FCFS age order, drain-burst writes first); the
+    row policy decides what the issue does to the bank (open-page keeps
+    the row open, closed-page auto-precharges)."""
+    pol = ctx["pol"]
+    qv, qr, qb, qrow = st["qv"], st["qr"], st["qb"], st["qrow"]
+    qarr, qphase, qwr = st["qarr"], st["qphase"], st["qwr"]
+    bank_busy, bank_row = st["bank_busy"], st["bank_row"]
+    t_rcd, t_rp, t_cl = ctx["t_rcd"], ctx["t_rp"], ctx["t_cl"]
+
+    b_busy = bank_busy[qr, qb] <= t
+    ref_blk = policies.cas_refresh_block(pol, aux["ref_due"],
+                                         aux["ref_target"], qr, qb)
+    cand0 = qv & (qphase == 1) & b_busy & ~ref_blk
+
+    # write-drain eligibility (inert under the default INLINE policy)
+    n_wq = jnp.where(qv & (qphase == 1) & qwr, 1, 0).sum()
+    draining = policies.update_drain_state(st["draining"], n_wq,
+                                           ctx["wq_hi"], ctx["wq_lo"])
+    st["draining"] = draining
+    any_read = (cand0 & ~qwr).any()
+    wr_ok = policies.write_eligible(pol, draining, n_wq, any_read,
+                                    ctx["wq_lo"])
+    cand = cand0 & (~qwr | wr_ok)
+
+    open_row = bank_row[qr, qb]
+    hit = open_row == qrow
+    closed = open_row < 0
+    drain_write = pol["drain_full"] & draining & qwr
+    # score: policy bonus first, then age (smaller arrival = older)
+    score = jnp.where(cand,
+                      policies.schedule_bonus(pol, hit, drain_write) - qarr,
+                      -BIG)
+    pick = jnp.argmax(score)
+    can_issue = cand[pick]
+    lat = jnp.where(hit[pick], t_cl,
+                    jnp.where(closed[pick], t_rcd + t_cl,
+                              t_rp + t_rcd + t_cl)).astype(jnp.int32)
+    ready = t + lat
+    pr, pb = qr[pick], qb[pick]
+    new_row, new_busy = policies.issue_row_update(pol, qrow[pick], ready,
+                                                  t_rp)
+    st["bank_busy"] = bank_busy.at[pr, pb].set(
+        jnp.where(can_issue, new_busy, bank_busy[pr, pb]))
+    st["bank_row"] = bank_row.at[pr, pb].set(
+        jnp.where(can_issue, new_row, bank_row[pr, pb]))
+    st["qphase"] = qphase.at[pick].set(
+        jnp.where(can_issue, 2, qphase[pick]))
+    st["qready"] = st["qready"].at[pick].set(
+        jnp.where(can_issue, ready, st["qready"][pick]))
+    st["n_act"] = st["n_act"] + jnp.where(can_issue & ~hit[pick], 1, 0)
+    st["n_conflict"] = st["n_conflict"] + jnp.where(
+        can_issue & ~hit[pick] & ~closed[pick], 1, 0)
+    return st, aux
+
+
+def _stage_transfer(st, aux, t, ctx):
+    """Bus grant: one transfer start per group per cycle.  Padded groups
+    (g >= n_groups) never match any valid entry's group_of_rank, so the
+    extra iterations are exact no-ops."""
+    R, pol = ctx["R"], ctx["pol"]
+    qv, qr, qb, qarr, qwr = st["qv"], st["qr"], st["qb"], st["qarr"], st["qwr"]
+    qphase, qready, qdone = st["qphase"], st["qready"], st["qdone"]
+    bank_busy = st["bank_busy"]
+    grp_busy, grp_wr_until = st["grp_busy"], st["grp_wr_until"]
+    ref_until = st["ref_until"]
+    t_wr, t_wtr = ctx["t_wr"], ctx["t_wtr"]
+
+    qphase = jnp.where(qv & (qphase == 2) & (qready <= t), 3, qphase)
+    slot_match = (t % ctx["L"]) == (qr % ctx["L"])
+    n_grants, n_slot_grants = st["n_grants"], st["n_slot_grants"]
+    bus_cycles, wr_bus_cycles = st["bus_cycles"], st["wr_bus_cycles"]
+    wr_extra = policies.write_recovery_extra(pol, ctx["t_rp"])
+    for g in range(R):
+        in_g = ctx["group_of_rank"][qr] == g
+        cand3 = qv & (qphase == 3) & in_g
+        # slotted (cascaded SLR): rank may start only in its time slot
+        cand3 = cand3 & (~ctx["slotted"] | slot_match)
+        # reads wait out the group's write-to-read turnaround window;
+        # a refreshing bank transfers nothing until its tRFC elapses.
+        cand3 = cand3 & (qwr | (grp_wr_until[g] <= t))
+        cand3 = cand3 & (ref_until[qr, qb] <= t)
+        cand3 = cand3 & (grp_busy[g] <= t)
+        score3 = jnp.where(cand3, -qarr, -BIG)
+        p3 = jnp.argmax(score3)
+        go = cand3[p3]
+        d = ctx["dur"][qr[p3]]
+        go_wr = go & qwr[p3]
+        grp_busy = grp_busy.at[g].set(jnp.where(go, t + d, grp_busy[g]))
+        qphase = qphase.at[p3].set(jnp.where(go, 4, qphase[p3]))
+        qdone = qdone.at[p3].set(jnp.where(go, t + d, qdone[p3]))
+        # write recovery: the bank stays busy tWR past the last beat
+        # (plus the closed-page auto-precharge, when selected); write-to-
+        # read turnaround arms the group's read blocker.
+        r3, b3 = qr[p3], qb[p3]
+        bank_busy = bank_busy.at[r3, b3].set(
+            jnp.where(go_wr,
+                      jnp.maximum(bank_busy[r3, b3], t + d + t_wr + wr_extra),
+                      bank_busy[r3, b3]))
+        grp_wr_until = grp_wr_until.at[g].set(
+            jnp.where(go_wr, t + d + t_wtr, grp_wr_until[g]))
+        bus_cycles = bus_cycles + jnp.where(go, d, 0)
+        wr_bus_cycles = wr_bus_cycles + jnp.where(go_wr, d, 0)
+        n_grants = n_grants + jnp.where(go, 1, 0)
+        n_slot_grants = n_slot_grants + jnp.where(go & slot_match[p3], 1, 0)
+    st.update(qphase=qphase, qdone=qdone, bank_busy=bank_busy,
+              grp_busy=grp_busy, grp_wr_until=grp_wr_until,
+              bus_cycles=bus_cycles, wr_bus_cycles=wr_bus_cycles,
+              n_grants=n_grants, n_slot_grants=n_slot_grants)
+    return st, aux
+
+
+def _stage_retire(st, aux, t, ctx):
+    """Retire completed transfers; free queue slots and MSHRs."""
+    n_cores = ctx["n_cores"]
+    qv, qc, qphase, qdone, qwr = (st["qv"], st["qc"], st["qphase"],
+                                  st["qdone"], st["qwr"])
+    fin = qv & (qphase == 4) & (qdone <= t)
+    fin_per_core = jax.ops.segment_sum(jnp.where(fin, 1, 0), qc,
+                                       num_segments=n_cores)
+    st["served"] = st["served"] + fin_per_core
+    st["c_finish"] = jnp.maximum(st["c_finish"], jax.ops.segment_max(
+        jnp.where(fin, t, -1), qc, num_segments=n_cores))
+    st["c_out"] = st["c_out"] - fin_per_core
+    st["n_wr"] = st["n_wr"] + jnp.where(fin & qwr, 1, 0).sum()
+    st["qv"] = qv & ~fin
+    st["qphase"] = jnp.where(fin, 0, qphase)
+    return st, aux
+
+
+def _stage_progress(st, aux, t, ctx):
+    """Core progress: oldest outstanding instruction per core limits the
+    runahead window.  A core's instruction counter freezes once its fixed
+    work is done: post-completion progress never feeds back into the
+    simulation (no requests left to arrive) and would otherwise make the
+    `inst` metric depend on how far past the makespan the scan runs — the
+    one obstacle to horizon-independent (early-exit) execution."""
+    n_cores, n_req, core = ctx["n_cores"], ctx["n_req"], ctx["core"]
+    tr_inst = ctx["traces"]["inst"]
+    inst_or_big = jnp.where(st["qv"], st["qinst"], jnp.float32(1e30))
+    oldest = jax.ops.segment_min(inst_or_big, st["qc"],
+                                 num_segments=n_cores)
+    oldest = jnp.minimum(oldest, jnp.float32(1e30))
+    window_ok = (st["c_inst"] - oldest) < core.window
+    nxt_inst = jnp.where(st["c_next"] < n_req,
+                         tr_inst[jnp.arange(n_cores),
+                                 jnp.minimum(st["c_next"], n_req - 1)],
+                         jnp.float32(1e30))
+    advance = window_ok & (st["served"] < n_req)
+    st["c_inst"] = jnp.minimum(
+        st["c_inst"] + jnp.where(advance, core.inst_per_fast_cycle, 0.0),
+        nxt_inst)
+    return st, aux
+
+
+def _stage_power(st, aux, t, ctx):
+    """Power-down residency: a real rank with no busy bank and no queued
+    request is idle; after t_pd consecutive idle cycles it is counted in
+    power-down."""
+    R = ctx["R"]
+    pending = jax.ops.segment_sum(jnp.where(st["qv"], 1, 0), st["qr"],
+                                  num_segments=R) > 0
+    rank_idle = (st["bank_busy"] <= t).all(axis=1) & ~pending \
+        & ctx["real_rank"]
+    st["idle_since"] = jnp.where(rank_idle, st["idle_since"], t + 1)
+    in_pd = rank_idle & ((t - st["idle_since"]) >= ctx["t_pd"])
+    st["pd_cycles"] = st["pd_cycles"] + jnp.where(
+        aux["work_left"], in_pd.sum(), 0)
+    return st, aux
+
+
+#: the controller pipeline, in execution order (order is load-bearing:
+#: the golden grid pins the exact cycle-level semantics it produces)
+_STAGES = (_stage_refresh, _stage_enqueue, _stage_schedule,
+           _stage_transfer, _stage_retire, _stage_progress, _stage_power)
 
 
 def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
               banks: int, chunk: int | None = None) -> dict:
-    """One full simulation; every config quantity in `params` is traced.
+    """One full simulation; every config quantity in `params` — including
+    the controller-policy selectors — is traced.
 
     traces: dict of (n_cores, n_req_max) arrays; the cell's real request
     count is params['n_req'] (padding beyond it is never read).
@@ -114,219 +417,51 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
     n_cores, n_req_max = traces["inst"].shape
     R = params["dur"].shape[0]                      # padded rank count
     B = banks
+    Q = core.q_size
     n_req = params["n_req"]
-    L = params["layers"]
-    t_rcd, t_rp, t_cl = params["t_rcd"], params["t_rp"], params["t_cl"]
-    t_wr, t_wtr = params["t_wr"], params["t_wtr"]
-    t_refi, t_rfc, t_pd = params["t_refi"], params["t_rfc"], params["t_pd"]
+    t_refi, t_rfc = params["t_refi"], params["t_rfc"]
+    pol = policies.selector_view(params)
     refresh_en = t_refi > 0
-    dur = params["dur"]
-    group_of_rank = params["group_of_rank"]
-    slotted = params["slotted"]
-    real_rank = jnp.arange(R, dtype=jnp.int32) < params["n_ranks"]
-
-    tr_inst = traces["inst"].astype(jnp.float32)
-    tr_rank = traces["rank"].astype(jnp.int32) % params["n_ranks"]
-    tr_bank = traces["bank"].astype(jnp.int32) % B
-    tr_row = traces["row"].astype(jnp.int32)
-    tr_wr = traces["wr"].astype(jnp.int32) != 0
+    t_refi_eff, t_rfc_eff = policies.refresh_timings(pol, t_refi, t_rfc, B,
+                                                     refresh_en)
+    wq_hi, wq_lo = policies.drain_watermarks(Q, n_cores, core.mshr)
+    ctx = {
+        "n_cores": n_cores, "R": R, "B": B, "L": params["layers"],
+        "core": core, "n_req": n_req,
+        "t_rcd": params["t_rcd"], "t_rp": params["t_rp"],
+        "t_cl": params["t_cl"], "t_wr": params["t_wr"],
+        "t_wtr": params["t_wtr"], "t_pd": params["t_pd"],
+        "refresh_en": refresh_en,
+        "t_refi_eff": t_refi_eff, "t_rfc_eff": t_rfc_eff,
+        "dur": params["dur"], "group_of_rank": params["group_of_rank"],
+        "slotted": params["slotted"],
+        "real_rank": jnp.arange(R, dtype=jnp.int32) < params["n_ranks"],
+        "pol": pol,
+        "wq_hi": wq_hi, "wq_lo": wq_lo,
+        "traces": {
+            "inst": traces["inst"].astype(jnp.float32),
+            "rank": traces["rank"].astype(jnp.int32) % params["n_ranks"],
+            "bank": traces["bank"].astype(jnp.int32) % B,
+            "row": traces["row"].astype(jnp.int32),
+            "wr": traces["wr"].astype(jnp.int32) != 0,
+        },
+    }
 
     def step(st, t):
         t = t.astype(jnp.int32)
-        qv, qc, qr, qb = st["qv"], st["qc"], st["qr"], st["qb"]
-        qrow, qinst, qarr = st["qrow"], st["qinst"], st["qarr"]
-        qphase, qready, qdone, qwr = (st["qphase"], st["qready"],
-                                      st["qdone"], st["qwr"])
-        bank_busy, bank_row = st["bank_busy"], st["bank_row"]
-        grp_busy, grp_wr_until = st["grp_busy"], st["grp_wr_until"]
-        ref_next, ref_until = st["ref_next"], st["ref_until"]
-        idle_since = st["idle_since"]
-        c_inst, c_next, c_out = st["c_inst"], st["c_next"], st["c_out"]
-        served, c_finish = st["served"], st["c_finish"]
-
-        # counters accumulated only while work remains, so fixed-work
-        # metrics (refresh/power-down residency) cover the makespan, not
-        # the idle tail of the scan horizon.
-        work_left = (served < n_req).any()
-
-        # ---- 0. refresh (before issue: a started refresh blocks the rank)
-        # A due rank waits until it has no busy bank AND no issued/granted
-        # request in flight (phase >= 2): refresh must not close a row
-        # under an already-CAS'd request or start mid-data-burst.  New CAS
-        # issue is blocked below while due, so the rank drains in bounded
-        # time.
-        ref_due = refresh_en & (t >= ref_next) & real_rank
-        bank_idle = (bank_busy <= t).all(axis=1)
-        in_flight = jax.ops.segment_sum(
-            jnp.where(qv & (qphase >= 2), 1, 0), qr, num_segments=R) > 0
-        ref_start = ref_due & bank_idle & ~in_flight
-        bank_busy = jnp.where(ref_start[:, None], t + t_rfc, bank_busy)
-        bank_row = jnp.where(ref_start[:, None], -1, bank_row)  # rows close
-        ref_until = jnp.where(ref_start, t + t_rfc, ref_until)
-        ref_next = jnp.where(ref_start, ref_next + t_refi, ref_next)
-        st["refresh_cycles"] = st["refresh_cycles"] + jnp.where(
-            work_left, ref_start.sum() * t_rfc, 0)
-
-        # ---- 1. enqueue (round-robin one core per cycle) ----------------
-        cid = t % n_cores
-        nxt = c_next[cid]
-        has_req = nxt < n_req
-        idx = jnp.minimum(nxt, n_req - 1)
-        arrived = tr_inst[cid, idx] <= c_inst[cid]
-        mshr_ok = c_out[cid] < core.mshr
-        free_slot = jnp.argmin(qv)          # first False
-        slot_ok = ~qv[free_slot]
-        do_enq = has_req & arrived & mshr_ok & slot_ok
-
-        qv = qv.at[free_slot].set(jnp.where(do_enq, True, qv[free_slot]))
-        qc = qc.at[free_slot].set(jnp.where(do_enq, cid, qc[free_slot]))
-        qr = qr.at[free_slot].set(
-            jnp.where(do_enq, tr_rank[cid, idx], qr[free_slot]))
-        qb = qb.at[free_slot].set(
-            jnp.where(do_enq, tr_bank[cid, idx], qb[free_slot]))
-        qrow = qrow.at[free_slot].set(
-            jnp.where(do_enq, tr_row[cid, idx], qrow[free_slot]))
-        qinst = qinst.at[free_slot].set(
-            jnp.where(do_enq, tr_inst[cid, idx], qinst[free_slot]))
-        qarr = qarr.at[free_slot].set(jnp.where(do_enq, t, qarr[free_slot]))
-        qphase = qphase.at[free_slot].set(
-            jnp.where(do_enq, 1, qphase[free_slot]))
-        qwr = qwr.at[free_slot].set(
-            jnp.where(do_enq, tr_wr[cid, idx], qwr[free_slot]))
-        c_next = c_next.at[cid].add(jnp.where(do_enq, 1, 0))
-        c_out = c_out.at[cid].add(jnp.where(do_enq, 1, 0))
-
-        # ---- 2. FR-FCFS issue (one command per cycle) --------------------
-        # A rank with refresh due accepts no new CAS, so its banks drain
-        # and the pending refresh starts within bounded time.
-        b_busy = bank_busy[qr, qb] <= t
-        cand = qv & (qphase == 1) & b_busy & ~ref_due[qr]
-        open_row = bank_row[qr, qb]
-        hit = open_row == qrow
-        closed = open_row < 0
-        # score: hits first, then age (smaller arrival = older)
-        score = jnp.where(cand,
-                          jnp.where(hit, BIG, 0) - qarr, -BIG)
-        pick = jnp.argmax(score)
-        can_issue = cand[pick]
-        lat = jnp.where(hit[pick], t_cl,
-                        jnp.where(closed[pick], t_rcd + t_cl,
-                                  t_rp + t_rcd + t_cl)).astype(jnp.int32)
-        ready = t + lat
-        pr, pb = qr[pick], qb[pick]
-        bank_busy = bank_busy.at[pr, pb].set(
-            jnp.where(can_issue, ready, bank_busy[pr, pb]))
-        bank_row = bank_row.at[pr, pb].set(
-            jnp.where(can_issue, qrow[pick], bank_row[pr, pb]))
-        qphase = qphase.at[pick].set(jnp.where(can_issue, 2, qphase[pick]))
-        qready = qready.at[pick].set(jnp.where(can_issue, ready,
-                                               qready[pick]))
-        st["n_act"] = st["n_act"] + jnp.where(can_issue & ~hit[pick], 1, 0)
-        st["n_conflict"] = st["n_conflict"] + jnp.where(
-            can_issue & ~hit[pick] & ~closed[pick], 1, 0)
-
-        # ---- 3. bus grant (one start per group per cycle) ----------------
-        # Padded groups (g >= n_groups) never match any valid entry's
-        # group_of_rank, so the extra iterations are exact no-ops.
-        qphase = jnp.where(qv & (qphase == 2) & (qready <= t), 3, qphase)
-        slot_match = (t % L) == (qr % L)
-        n_grants, n_slot_grants = st["n_grants"], st["n_slot_grants"]
-        bus_cycles, wr_bus_cycles = st["bus_cycles"], st["wr_bus_cycles"]
-        for g in range(R):
-            in_g = group_of_rank[qr] == g
-            cand3 = qv & (qphase == 3) & in_g
-            # slotted (cascaded SLR): rank may start only in its time slot
-            cand3 = cand3 & (~slotted | slot_match)
-            # reads wait out the group's write-to-read turnaround window;
-            # a refreshing rank transfers nothing until tRFC elapses.
-            cand3 = cand3 & (qwr | (grp_wr_until[g] <= t))
-            cand3 = cand3 & (ref_until[qr] <= t)
-            cand3 = cand3 & (grp_busy[g] <= t)
-            score3 = jnp.where(cand3, -qarr, -BIG)
-            p3 = jnp.argmax(score3)
-            go = cand3[p3]
-            d = dur[qr[p3]]
-            go_wr = go & qwr[p3]
-            grp_busy = grp_busy.at[g].set(jnp.where(go, t + d, grp_busy[g]))
-            qphase = qphase.at[p3].set(jnp.where(go, 4, qphase[p3]))
-            qdone = qdone.at[p3].set(jnp.where(go, t + d, qdone[p3]))
-            # write recovery: the bank stays busy tWR past the last beat;
-            # write-to-read turnaround arms the group's read blocker.
-            r3, b3 = qr[p3], qb[p3]
-            bank_busy = bank_busy.at[r3, b3].set(
-                jnp.where(go_wr,
-                          jnp.maximum(bank_busy[r3, b3], t + d + t_wr),
-                          bank_busy[r3, b3]))
-            grp_wr_until = grp_wr_until.at[g].set(
-                jnp.where(go_wr, t + d + t_wtr, grp_wr_until[g]))
-            bus_cycles = bus_cycles + jnp.where(go, d, 0)
-            wr_bus_cycles = wr_bus_cycles + jnp.where(go_wr, d, 0)
-            n_grants = n_grants + jnp.where(go, 1, 0)
-            n_slot_grants = n_slot_grants + jnp.where(go & slot_match[p3],
-                                                      1, 0)
-        st["bus_cycles"], st["wr_bus_cycles"] = bus_cycles, wr_bus_cycles
-        st["n_grants"], st["n_slot_grants"] = n_grants, n_slot_grants
-
-        # ---- 4. retire ----------------------------------------------------
-        fin = qv & (qphase == 4) & (qdone <= t)
-        served = served + jax.ops.segment_sum(
-            jnp.where(fin, 1, 0), qc, num_segments=n_cores)
-        c_finish = jnp.maximum(c_finish, jax.ops.segment_max(
-            jnp.where(fin, t, -1), qc, num_segments=n_cores))
-        c_out = c_out - jax.ops.segment_sum(
-            jnp.where(fin, 1, 0), qc, num_segments=n_cores)
-        st["n_wr"] = st["n_wr"] + jnp.where(fin & qwr, 1, 0).sum()
-        qv = qv & ~fin
-        qphase = jnp.where(fin, 0, qphase)
-
-        # ---- 5. core progress ---------------------------------------------
-        # oldest outstanding instruction per core (window limiter)
-        inst_or_big = jnp.where(qv, qinst, jnp.float32(1e30))
-        oldest = jax.ops.segment_min(inst_or_big, qc, num_segments=n_cores)
-        oldest = jnp.minimum(oldest, jnp.float32(1e30))
-        window_ok = (c_inst - oldest) < core.window
-        nxt_inst = jnp.where(c_next < n_req,
-                             tr_inst[jnp.arange(n_cores),
-                                     jnp.minimum(c_next, n_req - 1)],
-                             jnp.float32(1e30))
-        # freeze a core's instruction counter once its fixed work is done:
-        # post-completion progress never feeds back into the simulation
-        # (no requests left to arrive) and would otherwise make the `inst`
-        # metric depend on how far past the makespan the scan runs — the
-        # one obstacle to horizon-independent (early-exit) execution.
-        advance = window_ok & (served < n_req)
-        c_inst = jnp.minimum(
-            c_inst + jnp.where(advance, core.inst_per_fast_cycle, 0.0),
-            nxt_inst)
-
-        # ---- 6. power-down residency --------------------------------------
-        # a real rank with no busy bank and no queued request is idle; after
-        # t_pd consecutive idle cycles it is counted in power-down.
-        pending = jax.ops.segment_sum(jnp.where(qv, 1, 0), qr,
-                                      num_segments=R) > 0
-        rank_idle = (bank_busy <= t).all(axis=1) & ~pending & real_rank
-        idle_since = jnp.where(rank_idle, idle_since, t + 1)
-        in_pd = rank_idle & ((t - idle_since) >= t_pd)
-        st["pd_cycles"] = st["pd_cycles"] + jnp.where(
-            work_left, in_pd.sum(), 0)
-
-        st.update(qv=qv, qc=qc, qr=qr, qb=qb, qrow=qrow, qinst=qinst,
-                  qarr=qarr, qphase=qphase, qready=qready, qdone=qdone,
-                  qwr=qwr, bank_busy=bank_busy, bank_row=bank_row,
-                  grp_busy=grp_busy, grp_wr_until=grp_wr_until,
-                  ref_next=ref_next, ref_until=ref_until,
-                  idle_since=idle_since, c_inst=c_inst, c_next=c_next,
-                  c_out=c_out, served=served, c_finish=c_finish)
+        aux = {"work_left": (st["served"] < n_req).any()}
+        for stage in _STAGES:
+            st, aux = stage(st, aux, t, ctx)
         return st, None
 
     i32 = jnp.int32
     st = dict(
-        qv=jnp.zeros(Q_SIZE, bool), qc=jnp.zeros(Q_SIZE, i32),
-        qr=jnp.zeros(Q_SIZE, i32), qb=jnp.zeros(Q_SIZE, i32),
-        qrow=jnp.zeros(Q_SIZE, i32), qinst=jnp.zeros(Q_SIZE, jnp.float32),
-        qarr=jnp.zeros(Q_SIZE, i32), qphase=jnp.zeros(Q_SIZE, i32),
-        qready=jnp.zeros(Q_SIZE, i32), qdone=jnp.zeros(Q_SIZE, i32),
-        qwr=jnp.zeros(Q_SIZE, bool),
+        qv=jnp.zeros(Q, bool), qc=jnp.zeros(Q, i32),
+        qr=jnp.zeros(Q, i32), qb=jnp.zeros(Q, i32),
+        qrow=jnp.zeros(Q, i32), qinst=jnp.zeros(Q, jnp.float32),
+        qarr=jnp.zeros(Q, i32), qphase=jnp.zeros(Q, i32),
+        qready=jnp.zeros(Q, i32), qdone=jnp.zeros(Q, i32),
+        qwr=jnp.zeros(Q, bool),
         bank_busy=jnp.zeros((R, B), i32),
         bank_row=-jnp.ones((R, B), i32),
         grp_busy=jnp.zeros(R, i32),
@@ -335,17 +470,20 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         # (r+1)/n_ranks of the interval) — synchronized deadlines would
         # black out the whole channel every tREFI, which real controllers
         # avoid; padded ranks are gated by real_rank regardless.
-        ref_next=(t_refi * (jnp.arange(R, dtype=i32)
-                            % jnp.maximum(params["n_ranks"], 1) + 1)
+        ref_next=(t_refi_eff * (jnp.arange(R, dtype=i32)
+                                % jnp.maximum(params["n_ranks"], 1) + 1)
                   // jnp.maximum(params["n_ranks"], 1)).astype(i32),
-        ref_until=jnp.zeros(R, i32),
+        ref_until=jnp.zeros((R, B), i32),
+        ref_bank=jnp.zeros(R, i32),
         idle_since=jnp.zeros(R, i32),
+        draining=jnp.zeros((), bool),
         c_inst=jnp.zeros(n_cores, jnp.float32),
         c_next=jnp.zeros(n_cores, i32), c_out=jnp.zeros(n_cores, i32),
         served=jnp.zeros(n_cores, i32), c_finish=jnp.zeros(n_cores, i32),
         n_act=jnp.zeros((), i32), n_conflict=jnp.zeros((), i32),
         bus_cycles=jnp.zeros((), i32), wr_bus_cycles=jnp.zeros((), i32),
         n_wr=jnp.zeros((), i32), refresh_cycles=jnp.zeros((), i32),
+        ref_rank_blocked=jnp.zeros((), i32),
         pd_cycles=jnp.zeros((), i32),
         n_grants=jnp.zeros((), i32), n_slot_grants=jnp.zeros((), i32),
     )
@@ -387,7 +525,7 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
     complete = served >= n_req                       # per-core fixed work
     # fixed-work IPC: total trace instructions / per-core completion time
     finish_ns = jnp.maximum(c_finish, 1) * unit_ns
-    total_inst = tr_inst[jnp.arange(n_cores), n_req - 1]
+    total_inst = ctx["traces"]["inst"][jnp.arange(n_cores), n_req - 1]
     ipc = jnp.where(complete, total_inst / (finish_ns * 3.2),
                     c_inst / (t_ns * 3.2))           # fallback: horizon
     makespan_ns = jnp.max(jnp.where(complete, finish_ns, t_ns))
@@ -406,6 +544,7 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         "bus_cycles": final["bus_cycles"],
         "wr_bus_cycles": final["wr_bus_cycles"],
         "refresh_cycles": final["refresh_cycles"],
+        "ref_rank_blocked_cycles": final["ref_rank_blocked"],
         "pd_cycles": final["pd_cycles"],
         "pd_frac": (final["pd_cycles"].astype(jnp.float32)
                     / jnp.maximum(makespan_cycles * n_ranks_f, 1.0)),
@@ -461,11 +600,13 @@ def _with_wr(traces: dict) -> dict:
 
 
 def _with_timing_defaults(params: dict) -> dict:
-    """Default missing write/refresh timings to 0 (disabled) and a missing
-    power-down threshold to effectively-never (t_pd = BIG): a legacy params
-    dict must reproduce the pre-write-era engine exactly, and t_pd = 0
-    would mean *instant* power-down, not no power-down."""
+    """Default missing write/refresh timings to 0 (disabled), a missing
+    power-down threshold to effectively-never (t_pd = BIG; t_pd = 0 would
+    mean *instant* power-down), and missing policy selectors to the
+    paper's controller (all zeros): a legacy params dict must reproduce
+    the pre-write-era, pre-policy engine exactly."""
     missing = [k for k in _TIMING_DEFAULTS if k not in params]
+    missing += [k for k in policies.SELECTOR_KEYS if k not in params]
     if not missing:
         return params
     p = dict(params)

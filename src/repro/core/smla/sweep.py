@@ -2,9 +2,11 @@
 (or a handful of) jitted programs.
 
 The paper's headline figures sweep the cycle simulator over ~31 workloads
-x 5 IO models x 2/4/8 layers.  Run cell-by-cell that is O(grid) compiles
-and serial scans; here every grid cell becomes one row of a stacked batch
-and `engine.batched_simulate` vmaps a single compiled scan over it.
+x 5 IO models x 2/4/8 layers — and, beyond the paper, over the controller
+policy cross-product (`SweepSpec.policies`).  Run cell-by-cell that is
+O(grid) compiles and serial scans; here every grid cell becomes one row
+of a stacked batch and `engine.batched_simulate` vmaps a single compiled
+scan over it.
 
 Heterogeneous configs are padded to a common shape:
 * rank axis   -> max rank count in the batch (`StackConfig.to_params`);
@@ -12,10 +14,11 @@ Heterogeneous configs are padded to a common shape:
 * request axis-> max trace length (`traces.pad_traces`); the engine stops
   consuming at the cell's traced `n_req`.
 Cells are grouped by the remaining *static* quantities (core count,
-banks-per-rank) — one compile per group, cached across calls by
-`engine._compiled`, so e.g. the whole Fig-13 grid (2/4/8 layers x 5 IO
-models x mixes) is one compile and the Fig-12 grid compiles once per core
-count.
+banks-per-rank) — one compile per (group, chunk width), cached across
+calls by `engine._compiled`.  Controller policies are **traced** integer
+selectors (`core/smla/policies.py`), so the policy axis NEVER adds a
+compile: the whole scheduler x row-policy x refresh x write-drain
+cross-product reuses the shape group's executable.
 
 Within a group, execution is *makespan-aware*: the chunked engine exits a
 stacked batch only when its slowest cell finishes, so one slow baseline
@@ -24,14 +27,21 @@ cell would otherwise hold a batch of fast cascaded cells at the barrier.
 estimate (`analytic.estimate_service_cycles`) and splits the group into
 equal-size buckets of similar expected makespan — every bucket shares the
 same padded static shapes (short buckets are padded with duplicates of
-their own fastest cell), so the whole group is still ONE compile, invoked
-once per bucket.  When more than one JAX device is visible, the stacked
-cell axis of each bucket is sharded across devices (bucket sizes are
-rounded up to a device multiple); on a single device the sharding path is
-skipped entirely.
+their own fastest cell).  With the default ``chunk="auto"`` each bucket
+additionally derives its own scan-chunk width from its estimated
+makespan (`CHUNK_LADDER`, clamped to `engine.DEFAULT_CHUNK`), so fast
+buckets exit at finer granularity; chunk width never changes any metric
+except the `chunks_run` diagnostic, and the few ladder widths are each
+compiled once and cached across calls.  When more than one JAX device is
+visible, the stacked cell axis of each bucket is sharded across devices
+(bucket sizes are rounded up to a device multiple); on a single device
+the sharding path is skipped entirely.
 
 Metric results come back as structured per-cell dicts plus stacked scalar
-arrays (`SweepResult.scalars`) for machine-readable benchmark output.
+arrays (`SweepResult.scalars`) for machine-readable benchmark output,
+and per-bucket calibration metadata (`SweepResult.buckets`: analytic
+estimate vs measured makespan per cell) the figure benchmarks emit so
+estimate drift is visible in the perf trajectory.
 """
 from __future__ import annotations
 
@@ -42,7 +52,7 @@ import jax
 import numpy as np
 
 from repro.core.smla import engine
-from repro.core.smla.config import StackConfig, paper_configs
+from repro.core.smla.config import ControllerPolicy, StackConfig, paper_configs
 from repro.core.smla.engine import CoreParams
 from repro.core.smla.traces import (WorkloadSpec, core_traces, pad_traces,
                                     stack_traces)
@@ -50,9 +60,25 @@ from repro.core.smla.traces import (WorkloadSpec, core_traces, pad_traces,
 #: metrics that are scalars per cell (the rest are per-core arrays)
 SCALAR_METRICS = ("bandwidth_gbps", "n_act", "n_row_conflicts", "bus_util",
                   "horizon_ns", "makespan_ns", "n_wr", "bus_cycles",
-                  "wr_bus_cycles", "refresh_cycles", "pd_cycles", "pd_frac",
-                  "n_grants", "n_slot_grants", "n_enqueued", "n_outstanding",
-                  "chunks_run")
+                  "wr_bus_cycles", "refresh_cycles", "ref_rank_blocked_cycles",
+                  "pd_cycles", "pd_frac", "n_grants", "n_slot_grants",
+                  "n_enqueued", "n_outstanding", "chunks_run")
+
+#: scan-chunk widths ``chunk="auto"`` picks from, per bucket: the smallest
+#: width >= est/AUTO_CHUNK_TARGET so a bucket runs ~AUTO_CHUNK_TARGET
+#: chunks to its estimated makespan.  A short ladder (not arbitrary ints)
+#: bounds the number of distinct compiled executables at len(CHUNK_LADDER)
+#: per shape group, each cached across calls.  The target is calibrated
+#: against the estimate being an intentionally conservative upper bound
+#: (measured makespans run ~0.6-0.7x of it on the default grid): 32
+#: estimated chunks ~= 20 real ones, still well above while-loop
+#: dispatch overhead.
+CHUNK_LADDER = (128, 256, 512, 1024)
+AUTO_CHUNK_TARGET = 32
+
+#: SweepSpec.chunk sentinel: derive per-bucket widths from the analytic
+#: estimate instead of one global constant.
+AUTO = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,25 +93,36 @@ class SweepCell:
 class SweepSpec:
     """A batch of grid cells sharing one horizon and core model.
 
-    `chunk` is the engine's early-exit scan-chunk width (None = one
-    full-horizon chunk, i.e. no early exit).  `makespan_batching` orders
-    compatible cells by their analytic service-time estimate and buckets
-    them so fast cells are not barriered behind slow ones; `max_buckets`
-    caps how many buckets (executable invocations) one shape group may
-    use.  All buckets of a group share identical static shapes, so the
-    group still costs at most one compile."""
+    `chunk` is the engine's early-exit scan-chunk width: an int pins one
+    width for every bucket, None disables early exit (one full-horizon
+    chunk), and the default ``"auto"`` derives a per-bucket width from
+    the bucket's analytic makespan estimate (`CHUNK_LADDER`).
+    `makespan_batching` orders compatible cells by their analytic
+    service-time estimate and buckets them so fast cells are not
+    barriered behind slow ones; `max_buckets` caps how many buckets one
+    shape group may use.  `policies` is the controller-policy grid axis:
+    when set, every cell is swept once per policy (cell names gain a
+    ``|tag`` suffix); the selectors are traced, so the axis multiplies
+    the grid without multiplying compiles."""
     cells: tuple[SweepCell, ...]
     horizon: int
     core: CoreParams = CoreParams()
-    chunk: int | None = engine.DEFAULT_CHUNK
+    chunk: int | None | str = AUTO
     makespan_batching: bool = True
     max_buckets: int = 8
+    policies: tuple[ControllerPolicy, ...] | None = None
 
 
 @dataclasses.dataclass
 class SweepResult:
     names: list[str]
     cells: list[dict]                  # per-cell metric dicts (numpy)
+    #: per-cell effective scan-chunk width actually used
+    chunks: list[int] = dataclasses.field(default_factory=list)
+    #: per-bucket calibration metadata: {"cells", "chunk", "est_cycles",
+    #: "measured_cycles", "est_max", "measured_max"} — analytic estimate
+    #: vs measured makespan, emitted into the figure perf blocks
+    buckets: list[dict] = dataclasses.field(default_factory=list)
 
     def __getitem__(self, name: str) -> dict:
         return self.cells[self.names.index(name)]
@@ -119,6 +156,20 @@ def make_cell(name: str, stack: StackConfig, specs: Sequence[WorkloadSpec],
     return SweepCell(name, stack, traces)
 
 
+def policy_cells(cells: Sequence[SweepCell],
+                 policies: Sequence[ControllerPolicy]) -> list[SweepCell]:
+    """Cross `cells` with controller policies: each cell is replicated
+    once per policy (same traces — the workload does not change, only the
+    controller does) and renamed ``{name}|{policy.tag}``."""
+    out = []
+    for pol in policies:
+        for c in cells:
+            out.append(SweepCell(f"{c.name}|{pol.tag}",
+                                 dataclasses.replace(c.stack, policy=pol),
+                                 c.traces))
+    return out
+
+
 def paper_grid(workloads: Sequence[tuple[str, Sequence[WorkloadSpec], int]],
                layers: Sequence[int] = (4,), n_req: int = 500,
                config_names: Sequence[str] | None = None) -> list[SweepCell]:
@@ -138,25 +189,38 @@ def paper_grid(workloads: Sequence[tuple[str, Sequence[WorkloadSpec], int]],
     return cells
 
 
+def _auto_chunk(est_max: float) -> int:
+    """The ladder width for a bucket whose slowest member is estimated at
+    `est_max` fast cycles: smallest width giving ~AUTO_CHUNK_TARGET
+    chunks, clamped to engine.DEFAULT_CHUNK."""
+    target = est_max / AUTO_CHUNK_TARGET
+    for w in CHUNK_LADDER:
+        if w >= target:
+            return min(w, engine.DEFAULT_CHUNK)
+    return min(CHUNK_LADDER[-1], engine.DEFAULT_CHUNK)
+
+
 def _plan_buckets(spec: SweepSpec, group: list[SweepCell],
-                  n_dev: int) -> tuple[int, list[list[int]]]:
+                  n_dev: int) -> tuple[list[list[int]], list[float]]:
     """Split one static-shape group into equal-size makespan buckets.
 
-    Returns (bucket_size, buckets); each bucket is a list of positions
-    into `group`, padded to `bucket_size` (a multiple of `n_dev`) by
-    repeating the bucket's own fastest member — a duplicate of a resident
-    cell never extends the bucket's early-exit point.  One bucket_size per
-    group keeps the whole group at a single compiled executable."""
+    Returns (buckets, est): each bucket is a list of positions into
+    `group`, padded to a common size (a multiple of `n_dev`) by repeating
+    the bucket's own fastest member — a duplicate of a resident cell
+    never extends the bucket's early-exit point.  One bucket size per
+    group keeps every bucket on the same padded shapes.  `est` is the
+    per-position analytic service-time estimate (always computed: it
+    also drives the auto chunk width and the calibration metadata)."""
+    from repro.core.smla import analytic        # lazy: analytic imports us
     n = len(group)
+    est = [analytic.estimate_service_cycles(c.stack, c.traces, spec.core)
+           for c in group]
     single = (not spec.makespan_batching or spec.chunk is None or n <= 1)
     k = 1 if single else min(spec.max_buckets, n)
     size = -(-n // k)
     size = -(-size // n_dev) * n_dev            # device multiple
     k = -(-n // size)
     if k > 1:
-        from repro.core.smla import analytic    # lazy: analytic imports us
-        est = [analytic.estimate_service_cycles(c.stack, c.traces,
-                                                spec.core) for c in group]
         order = sorted(range(n), key=lambda j: (est[j], j))
     else:
         order = list(range(n))
@@ -165,7 +229,14 @@ def _plan_buckets(spec: SweepSpec, group: list[SweepCell],
         sl = order[b * size:(b + 1) * size]
         sl = sl + [sl[0]] * (size - len(sl))
         buckets.append(sl)
-    return size, buckets
+    return buckets, est
+
+
+def _bucket_chunk(spec: SweepSpec, bucket_est: Sequence[float]) -> int | None:
+    """The scan-chunk width one bucket runs with."""
+    if spec.chunk == AUTO:
+        return _auto_chunk(max(bucket_est))
+    return spec.chunk
 
 
 def _cell_sharding(n_dev: int):
@@ -180,25 +251,32 @@ def _cell_sharding(n_dev: int):
 
 
 def run_sweep(spec: SweepSpec) -> SweepResult:
-    """Execute every cell, batching compatible cells into vmapped jit
-    calls — bucketed by estimated makespan so the chunked engine's early
-    exit is not barriered on a slow outlier, and sharded over the cell
-    axis when multiple devices are visible.  Metrics are bit-identical to
-    per-cell `engine.simulate` with the same `chunk`."""
+    """Execute every cell (times every policy, when `spec.policies` is
+    set), batching compatible cells into vmapped jit calls — bucketed by
+    estimated makespan so the chunked engine's early exit is not
+    barriered on a slow outlier, and sharded over the cell axis when
+    multiple devices are visible.  Metrics are bit-identical to per-cell
+    `engine.simulate` with the same effective chunk width; chunk width
+    itself only moves the `chunks_run` diagnostic."""
+    cells = (list(spec.cells) if spec.policies is None
+             else policy_cells(spec.cells, spec.policies))
     order: dict[tuple, list[int]] = {}
-    for i, cell in enumerate(spec.cells):
+    for i, cell in enumerate(cells):
         key = (cell.traces["inst"].shape[0], cell.stack.banks_per_rank)
         order.setdefault(key, []).append(i)
 
     n_dev = max(len(jax.devices()), 1)
-    results: list[dict | None] = [None] * len(spec.cells)
+    results: list[dict | None] = [None] * len(cells)
+    chunks: list[int] = [0] * len(cells)
+    bucket_meta: list[dict] = []
     for (_, banks), idxs in order.items():
-        group = [spec.cells[i] for i in idxs]
+        group = [cells[i] for i in idxs]
         r_max = max(c.stack.n_ranks for c in group)
         n_req_max = max(c.traces["inst"].shape[1] for c in group)
-        size, buckets = _plan_buckets(spec, group, n_dev)
+        buckets, est = _plan_buckets(spec, group, n_dev)
         sharding = _cell_sharding(n_dev) if n_dev > 1 else None
         for bucket in buckets:
+            chunk_b = _bucket_chunk(spec, [est[j] for j in bucket])
             batch = [group[j] for j in bucket]
             plist = []
             for c in batch:
@@ -213,11 +291,27 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
                 traces = jax.device_put(traces, sharding)
             out = engine.batched_simulate(params, traces, spec.horizon,
                                           spec.core, banks,
-                                          chunk=spec.chunk)
+                                          chunk=chunk_b)
             # duplicate pad entries land on the same original index with
             # bit-identical values — assigning them again is harmless.
+            meta = {"cells": [], "chunk": engine.effective_chunk(
+                spec.horizon, chunk_b), "est_cycles": [],
+                "measured_cycles": []}
+            seen: set[int] = set()
             for j_pos, j in enumerate(bucket):
                 results[idxs[j]] = {k: np.asarray(v)[j_pos]
                                     for k, v in out.items()}
-    return SweepResult(names=[c.name for c in spec.cells],
-                       cells=results)
+                chunks[idxs[j]] = meta["chunk"]
+                if j in seen:
+                    continue                     # pad duplicate
+                seen.add(j)
+                meta["cells"].append(group[j].name)
+                meta["est_cycles"].append(float(est[j]))
+                meta["measured_cycles"].append(
+                    float(np.asarray(out["makespan_ns"])[j_pos])
+                    / float(plist[j_pos]["unit_ns"]))
+            meta["est_max"] = max(meta["est_cycles"])
+            meta["measured_max"] = max(meta["measured_cycles"])
+            bucket_meta.append(meta)
+    return SweepResult(names=[c.name for c in cells],
+                       cells=results, chunks=chunks, buckets=bucket_meta)

@@ -18,8 +18,9 @@ import numpy as np
 import pytest
 
 from repro.core.smla import energy as E
-from repro.core.smla import engine
-from repro.core.smla.config import StackConfig, paper_configs
+from repro.core.smla import engine, policies
+from repro.core.smla.config import (ControllerPolicy, RefreshGranularity,
+                                    RowPolicy, StackConfig, paper_configs)
 from repro.core.smla.engine import simulate
 from repro.core.smla.traces import (WorkloadSpec, core_traces,
                                     lm_serving_trace, synthetic_trace)
@@ -75,13 +76,25 @@ def _check_invariants(stack: StackConfig, m: dict, traces: dict):
     if bool(p["slotted"]):
         assert int(m["n_slot_grants"]) == int(m["n_grants"])
 
-    # refresh accounting is bounded by the schedule
+    # refresh accounting is bounded by the schedule (per-bank refresh
+    # fires banks-per-rank times as often for the shorter tRFCpb)
     t_refi, t_rfc = int(p["t_refi"]), int(p["t_rfc"])
+    if (t_refi > 0 and stack.policy.refresh_gran
+            == RefreshGranularity.PER_BANK):
+        t_refi = max(t_refi // stack.banks_per_rank, 1)
+        t_rfc = policies.t_rfc_per_bank(t_rfc)
     if t_refi > 0:
-        assert int(m["refresh_cycles"]) <= \
-            stack.n_ranks * (HORIZON // t_refi + 1) * t_rfc
+        max_events = stack.n_ranks * (HORIZON // t_refi + 1)
+        assert int(m["refresh_cycles"]) <= max_events * t_rfc
+        # whole-rank blackout cycles are bounded by the refresh windows
+        assert 0 <= int(m["ref_rank_blocked_cycles"]) <= max_events * t_rfc
     else:
         assert int(m["refresh_cycles"]) == 0
+        assert int(m["ref_rank_blocked_cycles"]) == 0
+
+    # closed-page is structurally conflict-free (no row is ever open)
+    if stack.policy.row == RowPolicy.CLOSED_PAGE:
+        assert int(m["n_row_conflicts"]) == 0
 
     # power-down residency is a fraction of rank-cycles over the makespan
     assert -1e-6 <= float(m["pd_frac"]) <= 1.0 + 1e-6
@@ -105,6 +118,19 @@ def test_invariants_all_io_models(cname):
     spec = WorkloadSpec("w", 25.0, 0.5, write_frac=0.4)
     m, traces = _run(stack, spec, seed=5)
     assert int(traces["wr"].sum()) > 0
+    _check_invariants(stack, m, traces)
+
+
+@pytest.mark.parametrize("pname", sorted(policies.non_default_presets()))
+def test_invariants_all_policies(pname):
+    """Every engine invariant holds under every non-default controller
+    policy, on the IO model most sensitive to it (cascaded SLR: slotted
+    transfers + per-rank groups exercise all gating paths)."""
+    pol = policies.POLICY_PRESETS[pname]
+    stack = dataclasses.replace(paper_configs(4)["cascaded_slr"],
+                                t_refi_ns=1500.0, policy=pol)
+    spec = WorkloadSpec("w", 25.0, 0.5, write_frac=0.4)
+    m, traces = _run(stack, spec, seed=5)
     _check_invariants(stack, m, traces)
 
 
@@ -267,16 +293,59 @@ if HAVE_HYPOTHESIS:
         rowhit=st.sampled_from([0.2, 0.6, 0.9]),
         write_frac=st.sampled_from([0.0, 0.3, 0.7]),
         refi_ns=st.sampled_from([0.0, 900.0, 7800.0]),
+        pname=st.sampled_from(sorted(policies.POLICY_PRESETS)),
         seed=st.integers(0, 50),
     )
     def test_invariants_random(cname, layers, mpki, rowhit, write_frac,
-                               refi_ns, seed):
+                               refi_ns, pname, seed):
         stack = dataclasses.replace(
             paper_configs(layers)[cname],
-            refresh=refi_ns > 0, t_refi_ns=refi_ns or 7800.0)
+            refresh=refi_ns > 0, t_refi_ns=refi_ns or 7800.0,
+            policy=policies.POLICY_PRESETS[pname])
         spec = WorkloadSpec("w", mpki, rowhit, write_frac=write_frac)
         m, traces = _run(stack, spec, seed)
         _check_invariants(stack, m, traces)
+
+    @_PROP_SETTINGS
+    @hypothesis.given(
+        cname=st.sampled_from(sorted(paper_configs(4))),
+        mpki=st.sampled_from([10.0, 40.0]),
+        write_frac=st.sampled_from([0.2, 0.5]),
+        seed=st.integers(0, 50),
+    )
+    def test_per_bank_never_blocks_more_random(cname, mpki, write_frac,
+                                               seed):
+        """Property form of the per-bank refresh invariant: for random
+        configs/traces, per-bank refresh never blacks out more whole-rank
+        cycles than all-bank on the same run."""
+        ab = dataclasses.replace(paper_configs(4)[cname], t_refi_ns=1200.0)
+        pb = dataclasses.replace(ab, policy=ControllerPolicy(
+            refresh_gran=RefreshGranularity.PER_BANK))
+        spec = WorkloadSpec("w", mpki, 0.5, write_frac=write_frac)
+        m_ab, traces = _run(ab, spec, seed)
+        m_pb = simulate(pb, traces, HORIZON)
+        assert int(m_pb["ref_rank_blocked_cycles"]) <= \
+            int(m_ab["ref_rank_blocked_cycles"])
+
+    @_PROP_SETTINGS
+    @hypothesis.given(
+        cname=st.sampled_from(sorted(paper_configs(4))),
+        mpki=st.sampled_from([10.0, 40.0]),
+        rowhit=st.sampled_from([0.3, 0.8]),
+        seed=st.integers(0, 50),
+    )
+    def test_closed_page_zero_hits_random(cname, mpki, rowhit, seed):
+        """Property form: closed-page never records a row hit or a row
+        conflict, whatever the trace locality."""
+        stack = dataclasses.replace(
+            paper_configs(4)[cname], t_refi_ns=1500.0,
+            policy=ControllerPolicy(row=RowPolicy.CLOSED_PAGE))
+        spec = WorkloadSpec("w", mpki, rowhit, write_frac=0.3)
+        m, _ = _run(stack, spec, seed)
+        assert int(m["n_row_conflicts"]) == 0
+        if bool(np.asarray(m["complete"]).all()) \
+                and int(m["n_outstanding"]) == 0:
+            assert int(m["n_act"]) == int(m["n_grants"])
 
     @_PROP_SETTINGS
     @hypothesis.given(

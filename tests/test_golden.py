@@ -62,8 +62,9 @@ def _run_grid() -> dict:
     c0 = engine.compile_count()
     res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), HORIZON))
     compiles = engine.compile_count() - c0
-    assert compiles <= 1, \
-        f"golden grid is one static shape group, took {compiles} compiles"
+    assert compiles <= len(set(res.chunks)), \
+        f"golden grid is one static shape group (x auto-chunk widths), " \
+        f"took {compiles} compiles"
     out = {}
     for name, m in zip(res.names, res.cells):
         cell = {k: int(np.asarray(m[k])) for k in INT_METRICS}

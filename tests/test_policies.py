@@ -1,0 +1,296 @@
+"""Controller-policy subsystem: traced selectors, per-policy sweep
+identity, and the behavioural pin of every non-default policy.
+
+The refactored engine must satisfy two global contracts:
+* with default policies it is bit-identical to the pre-policy engine
+  (pinned by tests/test_golden.py — unregenerated), and
+* every policy selector is *traced*: flipping a policy NEVER recompiles,
+  and the batched sweep path stays bit-identical to per-config
+  simulate() under every selector.
+
+Each non-default policy's effect is then pinned by a structural
+invariant (closed-page has zero row hits; per-bank refresh never blacks
+out more rank-cycles than all-bank; FCFS refuses the row-hit reorder
+FR-FCFS makes; drain policies hold writes without ever losing one), and
+the controller queue is proven lossless at any depth (`CoreParams.
+q_size`).  (No hypothesis dependency — this module must run in a bare
+environment.)"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.smla import engine, policies, sweep
+from repro.core.smla.config import (ControllerPolicy, RefreshGranularity,
+                                    RowPolicy, SchedPolicy, StackConfig,
+                                    WriteDrainPolicy, paper_configs)
+from repro.core.smla.engine import CoreParams, simulate
+from repro.core.smla.traces import WorkloadSpec, core_traces
+
+N_CORES = 2
+N_REQ = 80
+HORIZON = 30_000          # generous: policy runs must complete fixed work
+
+#: refresh tightened so the refresh machinery fires many times inside the
+#: horizon, write-heavy so the drain machinery has writes to hold
+WRITE_SPEC = WorkloadSpec("w", 25.0, 0.5, write_frac=0.4)
+
+
+def _stack(cname="baseline", **over):
+    sc = dataclasses.replace(paper_configs(4)[cname], t_refi_ns=1500.0)
+    return dataclasses.replace(sc, **over) if over else sc
+
+
+def _run(stack: StackConfig, seed=5, spec=WRITE_SPEC, horizon=HORIZON):
+    traces = core_traces(seed, [spec] * N_CORES, N_REQ, stack.n_ranks,
+                         stack.banks_per_rank)
+    return simulate(stack, traces, horizon), traces
+
+
+# ----------------------------------------------------------------------------
+# traced selectors: the policy cross-product costs zero extra compiles
+# ----------------------------------------------------------------------------
+
+def test_policy_selectors_are_traced():
+    """Flipping any policy selector must reuse the compiled executable:
+    the whole cross-product is served by the default policy's program."""
+    stack = _stack()
+    traces = core_traces(0, [WRITE_SPEC] * N_CORES, N_REQ, stack.n_ranks,
+                         stack.banks_per_rank)
+    simulate(stack, traces, HORIZON)                  # warm (may compile)
+    engine.reset_compile_count()
+    for pol in policies.non_default_presets().values():
+        simulate(dataclasses.replace(stack, policy=pol), traces, HORIZON)
+    assert engine.compile_count() == 0, \
+        "a policy selector leaked into the static compile signature"
+
+
+def test_sweep_matches_simulate_every_policy():
+    """Batched path vs per-config simulate(), bit-identical under every
+    non-default policy selector — across all five IO models."""
+    base_cells = tuple(
+        sweep.make_cell(n, dataclasses.replace(sc, t_refi_ns=1500.0),
+                        [WRITE_SPEC] * N_CORES, N_REQ, seed=7)
+        for n, sc in paper_configs(4).items())
+    pols = tuple(policies.POLICY_PRESETS.values())
+    res = sweep.run_sweep(sweep.SweepSpec(base_cells, 6_000, policies=pols))
+    for pol in pols:
+        for cell in base_cells:
+            name = f"{cell.name}|{pol.tag}"
+            stack = dataclasses.replace(cell.stack, policy=pol)
+            chunk = res.chunks[res.names.index(name)]
+            ref = simulate(stack, cell.traces, 6_000, chunk=chunk)
+            for k in ref:
+                assert np.array_equal(np.asarray(res[name][k]),
+                                      np.asarray(ref[k])), (name, k)
+
+
+# ----------------------------------------------------------------------------
+# row policy
+# ----------------------------------------------------------------------------
+
+def test_closed_page_has_zero_row_hits():
+    """Closed-page auto-precharges after every access: structurally no
+    row is ever found open, so every issued CAS is an activate and no
+    access ever conflicts with an open row."""
+    m, _ = _run(_stack(policy=ControllerPolicy(row=RowPolicy.CLOSED_PAGE)))
+    assert bool(np.asarray(m["complete"]).all())
+    # complete run with an empty queue: grants == issues == activates
+    assert int(m["n_outstanding"]) == 0
+    assert int(m["n_act"]) == int(m["n_grants"])
+    assert int(m["n_row_conflicts"]) == 0
+    # open-page on the same trace does exploit row hits
+    m_open, _ = _run(_stack())
+    assert int(m_open["n_act"]) < int(m_open["n_grants"])
+
+
+def test_closed_page_never_speeds_up_row_local_work():
+    """A highly row-local stream can only lose from closing its rows."""
+    local = WorkloadSpec("loc", 40.0, 0.9)
+    m_open, _ = _run(_stack(refresh=False), spec=local)
+    m_closed, _ = _run(_stack(refresh=False,
+                              policy=ControllerPolicy(
+                                  row=RowPolicy.CLOSED_PAGE)), spec=local)
+    assert float(m_closed["makespan_ns"]) >= float(m_open["makespan_ns"])
+
+
+# ----------------------------------------------------------------------------
+# refresh granularity
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cname", list(paper_configs(4)))
+def test_per_bank_refresh_blocks_fewer_rank_cycles(cname):
+    """The NOM-style motivation, pinned as an invariant: per-bank refresh
+    never blacks out more whole-rank cycles than all-bank refresh of the
+    same configuration — its point is that the rank's other banks keep
+    serving through each refresh."""
+    m_ab, traces = _run(_stack(cname))
+    m_pb = simulate(_stack(cname, policy=ControllerPolicy(
+        refresh_gran=RefreshGranularity.PER_BANK)), traces, HORIZON)
+    assert int(m_ab["refresh_cycles"]) > 0          # machinery fired
+    assert int(m_pb["refresh_cycles"]) > 0
+    assert int(m_pb["ref_rank_blocked_cycles"]) <= \
+        int(m_ab["ref_rank_blocked_cycles"])
+    # all-bank refresh blocks the whole rank for tRFC per event
+    assert int(m_ab["ref_rank_blocked_cycles"]) > 0
+
+
+def test_per_bank_refresh_off_is_noop():
+    """refresh=False disables per-bank refresh exactly, like all-bank."""
+    sc = _stack(refresh=False, policy=ControllerPolicy(
+        refresh_gran=RefreshGranularity.PER_BANK))
+    m, _ = _run(sc)
+    assert int(m["refresh_cycles"]) == 0
+    assert int(m["ref_rank_blocked_cycles"]) == 0
+
+
+# ----------------------------------------------------------------------------
+# scheduler policy
+# ----------------------------------------------------------------------------
+
+def test_fcfs_refuses_row_hit_reorder():
+    """Crafted three-request trace to one bank (rows A, B, A, arriving
+    together): FR-FCFS serves the second A first as a row hit (2
+    activates), FCFS strictly in order (3 activates, 2 conflicts) — and
+    strict age order can only be slower here."""
+    sc = dataclasses.replace(paper_configs(4)["baseline"], refresh=False)
+    tr = {"inst": np.zeros((1, 3), np.float32),
+          "rank": np.zeros((1, 3), np.int32),
+          "bank": np.zeros((1, 3), np.int32),
+          "row": np.array([[7, 9, 7]], np.int32),
+          "wr": np.zeros((1, 3), np.int32)}
+    m_fr = simulate(sc, tr, 2_000)
+    m_fc = simulate(dataclasses.replace(
+        sc, policy=ControllerPolicy(scheduler=SchedPolicy.FCFS)), tr, 2_000)
+    assert int(m_fr["n_act"]) == 2 and int(m_fr["n_row_conflicts"]) == 1
+    assert int(m_fc["n_act"]) == 3 and int(m_fc["n_row_conflicts"]) == 2
+    assert float(m_fc["makespan_ns"]) > float(m_fr["makespan_ns"])
+
+
+# ----------------------------------------------------------------------------
+# write-drain policy
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("drain", [WriteDrainPolicy.DRAIN_WHEN_FULL,
+                                   WriteDrainPolicy.OPPORTUNISTIC])
+def test_drain_policies_complete_and_lose_no_write(drain):
+    """Held writes must still all retire: same write count and request
+    conservation as the inline policy, on every IO model."""
+    for cname in paper_configs(4):
+        m_in, traces = _run(_stack(cname))
+        m_dr = simulate(_stack(cname, policy=ControllerPolicy(
+            write_drain=drain)), traces, HORIZON)
+        assert bool(np.asarray(m_dr["complete"]).all()), (cname, drain)
+        assert int(m_dr["n_wr"]) == int(m_in["n_wr"]) \
+            == int(traces["wr"].sum()), (cname, drain)
+        assert int(m_dr["n_enqueued"]) == \
+            int(np.asarray(m_dr["served"]).sum())
+
+
+@pytest.mark.parametrize("drain", [WriteDrainPolicy.DRAIN_WHEN_FULL,
+                                   WriteDrainPolicy.OPPORTUNISTIC])
+def test_drain_policies_actually_reschedule(drain):
+    """The drain machinery must demonstrably engage: on a write-heavy
+    intense trace (watermarks reachable — `policies.drain_watermarks`
+    caps them at the MSHR-reachable occupancy, not the raw queue depth)
+    a drain policy reorders service, so its scheduling metrics diverge
+    from the inline policy even though every total (writes retired,
+    write bus occupancy, requests served) is conserved.  Guards against
+    a regression that silently turns either drain policy back into
+    inline — e.g. watermarks drifting out of reach again."""
+    sc = _stack(refresh=False)
+    spec = WorkloadSpec("wr", 60.0, 0.3, write_frac=0.5)
+    m_in, traces = _run(sc, spec=spec)
+    m_dr = simulate(dataclasses.replace(sc, policy=ControllerPolicy(
+        write_drain=drain)), traces, HORIZON)
+    assert bool(np.asarray(m_dr["complete"]).all())
+    # held writes concentrate into bursts, never changing the totals
+    assert int(m_dr["wr_bus_cycles"]) == int(m_in["wr_bus_cycles"])
+    assert int(m_dr["n_wr"]) == int(m_in["n_wr"])
+    assert np.array_equal(np.asarray(m_dr["served"]),
+                          np.asarray(m_in["served"]))
+    # ... but the schedule itself must differ from inline
+    diverged = [k for k in m_in
+                if not np.array_equal(np.asarray(m_dr[k]),
+                                      np.asarray(m_in[k]))]
+    assert "makespan_ns" in diverged or "n_act" in diverged, \
+        f"{drain.name} degenerated to INLINE (no metric diverged)"
+
+
+# ----------------------------------------------------------------------------
+# queue-depth knob (q_size) — a full queue stalls, it never drops
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q_size", [2, 4, 32])
+def test_queue_never_drops_requests(q_size):
+    """Request conservation at any queue depth, including one smaller
+    than the MSHR file: enqueued == served + outstanding always, and the
+    fixed work completes with every request served exactly once."""
+    core = CoreParams(q_size=q_size)
+    stack = _stack()
+    traces = core_traces(3, [WRITE_SPEC] * N_CORES, N_REQ, stack.n_ranks,
+                         stack.banks_per_rank)
+    m = simulate(stack, traces, HORIZON, core)
+    served = np.asarray(m["served"])
+    assert int(m["n_enqueued"]) == int(served.sum()) + \
+        int(m["n_outstanding"])
+    assert bool(np.asarray(m["complete"]).all()), \
+        f"q_size={q_size} lost requests (stall must not become a drop)"
+    assert (served == N_REQ).all()
+    assert int(m["n_wr"]) == int(traces["wr"].sum())
+
+
+def test_q_size_is_static_compile_knob():
+    """q_size sizes the queue arrays: a new depth is a new executable,
+    the same depth is a cache hit."""
+    stack = _stack()
+    traces = core_traces(0, [WRITE_SPEC] * N_CORES, N_REQ, stack.n_ranks,
+                         stack.banks_per_rank)
+    simulate(stack, traces, HORIZON, CoreParams(q_size=16))   # warm
+    engine.reset_compile_count()
+    simulate(stack, traces, HORIZON, CoreParams(q_size=16))
+    assert engine.compile_count() == 0
+    simulate(stack, traces, HORIZON, CoreParams(q_size=8))
+    assert engine.compile_count() == 1
+
+
+# ----------------------------------------------------------------------------
+# policy plumbing
+# ----------------------------------------------------------------------------
+
+def test_drain_watermarks_reachable():
+    """Watermarks derive from the MSHR-reachable queue occupancy, so the
+    drain burst can actually arm: with 2 cores x 8 MSHRs in front of the
+    default 32-deep queue only 16 entries are reachable — 3/4 of the raw
+    depth (24) never would be."""
+    assert policies.drain_watermarks(32, 2, 8) == (12, 4)
+    assert policies.drain_watermarks(32, 16, 8) == (24, 8)   # queue-bound
+    hi, lo = policies.drain_watermarks(2, 2, 8)              # tiny queue
+    assert 1 <= hi <= 2 and 0 <= lo < hi
+
+
+def test_policy_tags_and_cells():
+    assert ControllerPolicy().tag == "default"
+    pol = ControllerPolicy(scheduler=SchedPolicy.FCFS,
+                           row=RowPolicy.CLOSED_PAGE,
+                           refresh_gran=RefreshGranularity.PER_BANK,
+                           write_drain=WriteDrainPolicy.OPPORTUNISTIC)
+    assert pol.tag == "fcfs-closed-pb-oppdrain"
+    cells = [sweep.make_cell("a", paper_configs(4)["baseline"],
+                             [WRITE_SPEC], 20, seed=0)]
+    out = sweep.policy_cells(cells, [ControllerPolicy(), pol])
+    assert [c.name for c in out] == ["a|default", "a|fcfs-closed-pb-oppdrain"]
+    assert out[0].stack.policy.is_default
+    assert out[1].stack.policy == pol
+    assert out[1].traces is cells[0].traces       # traces shared, not copied
+
+
+def test_to_params_carries_selectors():
+    pol = ControllerPolicy(scheduler=SchedPolicy.FCFS,
+                           write_drain=WriteDrainPolicy.OPPORTUNISTIC)
+    p = dataclasses.replace(paper_configs(4)["baseline"],
+                            policy=pol).to_params()
+    assert p["sched_sel"] == int(SchedPolicy.FCFS)
+    assert p["row_sel"] == int(RowPolicy.OPEN_PAGE)
+    assert p["ref_sel"] == int(RefreshGranularity.ALL_BANK)
+    assert p["drain_sel"] == int(WriteDrainPolicy.OPPORTUNISTIC)

@@ -26,9 +26,15 @@ SPECS = [WORKLOADS[4], WORKLOADS[20]]      # both carry nonzero write_frac
 FAST_SPECS = [WORKLOADS[20], WORKLOADS[26]]
 
 
-def _assert_cell_equal(name, got, ref):
+def _assert_cell_equal(name, got, ref, include_chunks=False):
+    """Bit-identity across every metric.  `chunks_run` is the documented
+    chunk-width diagnostic — the default ``chunk="auto"`` sweep may run a
+    different per-bucket width than a standalone simulate(), so it is
+    only compared when the caller pinned the width (`include_chunks`)."""
     assert set(got) == set(ref), name
     for k in ref:
+        if k == "chunks_run" and not include_chunks:
+            continue
         a, b = np.asarray(got[k]), np.asarray(ref[k])
         assert a.shape == b.shape, (name, k)
         assert np.array_equal(a, b), (name, k, a, b)
@@ -65,7 +71,8 @@ def test_sweep_matches_simulate_writes_and_refresh():
                                          N_REQ, seed=7))
     c0 = engine.compile_count()
     res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), HORIZON))
-    assert engine.compile_count() - c0 <= 1      # one shape group
+    # one shape group; at most one compile per auto-chunk ladder width
+    assert engine.compile_count() - c0 <= len(set(res.chunks))
     saw_wr = saw_ref = 0
     for cell, got in zip(cells, res.cells):
         ref = engine.simulate(cell.stack, cell.traces, HORIZON)
@@ -225,7 +232,8 @@ def test_makespan_buckets_decouple_fast_from_slow():
     res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), HORIZON, chunk=256))
     for cell in cells:
         ref = engine.simulate(cell.stack, cell.traces, HORIZON, chunk=256)
-        _assert_cell_equal(cell.name, res[cell.name], ref)
+        _assert_cell_equal(cell.name, res[cell.name], ref,
+                           include_chunks=True)
     slow_chunks = int(np.asarray(res["slow"]["chunks_run"]))
     for i in range(3):
         assert int(np.asarray(res[f"fast{i}"]["chunks_run"])) < slow_chunks
@@ -270,8 +278,10 @@ def test_chunking_and_bucketing_keep_compile_count():
                                          N_REQ, seed=7))
     spec = sweep.SweepSpec(tuple(cells), HORIZON)
     c0 = engine.compile_count()
-    sweep.run_sweep(spec)
-    assert engine.compile_count() - c0 <= 1
+    res = sweep.run_sweep(spec)
+    # one shape group; the auto-chunk ladder may add one compile per
+    # distinct bucket width, never more
+    assert engine.compile_count() - c0 <= len(set(res.chunks))
     engine.reset_compile_count()
     sweep.run_sweep(spec)                        # cached across calls
     assert engine.compile_count() == 0
@@ -319,6 +329,100 @@ def test_scalars_includes_chunks_run():
     assert (tab["chunks_run"] >= 1).all()
 
 
+def test_effective_chunk_and_n_chunks_edges():
+    """Edge cases of the chunking arithmetic every consumer relies on:
+    chunk wider than the horizon clamps, chunk=1 scans cycle-at-a-time,
+    horizon=1 degenerates to one single-cycle chunk, None spans it all."""
+    assert engine.effective_chunk(100, 5000) == 100      # chunk > horizon
+    assert engine.n_chunks(100, 5000) == 1
+    assert engine.effective_chunk(100, 1) == 1           # chunk = 1
+    assert engine.n_chunks(100, 1) == 100
+    assert engine.effective_chunk(1, 64) == 1            # horizon = 1
+    assert engine.n_chunks(1, 64) == 1
+    assert engine.effective_chunk(1, None) == 1
+    assert engine.n_chunks(1, None) == 1
+    assert engine.effective_chunk(7_000, None) == 7_000  # full horizon
+    assert engine.n_chunks(7_000, None) == 1
+    assert engine.n_chunks(7_000, 1024) == 7             # non-dividing
+    assert engine.effective_chunk(100, 0) == 1           # floor at 1
+    # and the engine actually runs at the extremes, bit-identically
+    sc = paper_configs(4)["cascaded_mlr"]
+    traces = core_traces(1, [WORKLOADS[20]], 30, sc.n_ranks,
+                         sc.banks_per_rank)
+    full = engine.simulate(sc, traces, 3_000, chunk=None)
+    for chunk in (1, 3_001):
+        m = engine.simulate(sc, traces, 3_000, chunk=chunk)
+        for k in full:
+            if k == "chunks_run":
+                continue
+            assert np.array_equal(np.asarray(m[k]),
+                                  np.asarray(full[k])), (chunk, k)
+
+
+def test_adaptive_chunk_per_bucket():
+    """With the default chunk="auto" a sweep over one slow arrival-limited
+    cell and several fast cells must pick a finer scan chunk for the fast
+    bucket than for the slow one — and every cell must still be
+    bit-identical to a standalone simulate() at its bucket's width."""
+    cfgs = paper_configs(4)
+    slow_spec = [WorkloadSpec("slow", 0.5, 0.6)] * 2      # arrival-limited
+    cells = [sweep.make_cell("slow", cfgs["baseline"], slow_spec,
+                             N_REQ, seed=1)]
+    for i in range(3):
+        cells.append(sweep.make_cell(f"fast{i}", cfgs["cascaded_mlr"],
+                                     FAST_SPECS, N_REQ, seed=i))
+    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), HORIZON))
+    by_name = dict(zip(res.names, res.chunks))
+    assert by_name["fast0"] < by_name["slow"]            # finer granularity
+    assert max(res.chunks) <= engine.DEFAULT_CHUNK       # clamped
+    assert all(c in sweep.CHUNK_LADDER for c in res.chunks)
+    for cell in cells:
+        ref = engine.simulate(cell.stack, cell.traces, HORIZON,
+                              chunk=by_name[cell.name])
+        _assert_cell_equal(cell.name, res[cell.name], ref,
+                           include_chunks=True)
+
+
+def test_bucket_calibration_metadata():
+    """run_sweep must report, per bucket, the analytic estimate next to
+    the measured makespan for every resident cell (pad duplicates
+    excluded) — the figure perf blocks emit exactly this."""
+    cells = tuple(sweep.make_cell(n, sc, SPECS, N_REQ, seed=5)
+                  for n, sc in paper_configs(4).items())
+    res = sweep.run_sweep(sweep.SweepSpec(cells, HORIZON))
+    assert res.buckets
+    seen = []
+    for b in res.buckets:
+        assert set(b) >= {"cells", "chunk", "est_cycles",
+                          "measured_cycles", "est_max", "measured_max"}
+        assert len(b["cells"]) == len(b["est_cycles"]) \
+            == len(b["measured_cycles"])
+        assert b["est_max"] == max(b["est_cycles"])
+        assert all(e > 0 for e in b["est_cycles"])
+        seen += b["cells"]
+    assert sorted(seen) == sorted(res.names)             # no dup, no loss
+
+
+def test_estimate_upper_bounds_default_grid():
+    """On the default paper grid (default policies, stock timings) the
+    analytic estimate must be a true UPPER bound on the measured
+    makespan: an engine change that slows the simulated machine past the
+    estimate shows up here instead of silently skewing the bucketing and
+    chunk derivation."""
+    for layers in (2, 4):
+        for cname, sc in paper_configs(layers).items():
+            traces = core_traces(0, SPECS, N_REQ, sc.n_ranks,
+                                 sc.banks_per_rank)
+            cell = sweep.SweepCell(cname, sc, traces)
+            est = estimate_service_cycles(sc, traces)
+            m = engine.simulate(sc, traces, default_horizon([cell]))
+            assert bool(np.asarray(m["complete"]).all()), (layers, cname)
+            measured = float(m["makespan_ns"]) / sc.unit_ns
+            assert measured <= est, \
+                f"L{layers}/{cname}: measured {measured:.0f} > " \
+                f"estimate {est:.0f}"
+
+
 def test_scalars_rejects_per_core_metrics_clearly():
     cells = (sweep.make_cell("one", paper_configs(4)["baseline"], SPECS,
                              N_REQ, seed=5),)
@@ -328,3 +432,28 @@ def test_scalars_rejects_per_core_metrics_clearly():
     # size-1 arrays (e.g. a metric wrapped in an extra axis) still coerce
     res.cells[0]["wrapped"] = np.array([1.5])
     assert res.scalars(keys=("wrapped",))["wrapped"][0] == 1.5
+
+
+def test_scalars_on_policy_axis():
+    """The policy grid axis multiplies cells (named `cell|tag`) and the
+    stacked scalar table follows: one row per (cell, policy), every
+    scalar metric finite, and the default-policy rows bit-identical to a
+    sweep without the axis."""
+    from repro.core.smla import policies
+
+    cells = tuple(sweep.make_cell(n, sc, SPECS, 60, seed=5)
+                  for n, sc in paper_configs(4).items())
+    pols = (policies.PAPER_DEFAULT,
+            policies.POLICY_PRESETS["closed_page"])
+    res = sweep.run_sweep(sweep.SweepSpec(cells, HORIZON, policies=pols))
+    assert len(res.names) == len(cells) * len(pols)
+    assert res.names[:len(cells)] == [f"{c.name}|default" for c in cells]
+    assert res.names[len(cells):] == \
+        [f"{c.name}|{pols[1].tag}" for c in cells]
+    tab = res.scalars()
+    for k in sweep.SCALAR_METRICS:
+        assert tab[k].shape == (len(res.names),)
+        assert np.isfinite(tab[k]).all(), k
+    plain = sweep.run_sweep(sweep.SweepSpec(cells, HORIZON))
+    for c in cells:
+        _assert_cell_equal(c.name, res[f"{c.name}|default"], plain[c.name])
