@@ -1,6 +1,6 @@
 """CI gate: the chunked sweep engine's early exit must actually engage.
 
-Reads the fig11 and fig_policy sections of `BENCH_smla_sweep.json`
+Reads the fig11, fig_policy, and fig_refresh sections of `BENCH_smla_sweep.json`
 (written by `benchmarks/run.py --smoke` just before this runs) and fails
 unless, in each, at least one non-baseline cell ran strictly fewer chunks
 than its bucket's horizon allows — i.e. the while-loop terminated on
@@ -20,7 +20,7 @@ import sys
 
 from benchmarks._util import BENCH_JSON_DEFAULT, BENCH_JSON_ENV
 
-GATED_FIGURES = ("fig11", "fig_policy")
+GATED_FIGURES = ("fig11", "fig_policy", "fig_refresh")
 
 
 def check_figure(name: str, data: dict) -> str | None:

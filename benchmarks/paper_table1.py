@@ -15,9 +15,18 @@ def run() -> list[str]:
     ours = E.table1()
     rows = ["metric,200MHz,400MHz,800MHz,1600MHz,paper_match"]
     for k, vals in ours.items():
-        match = all(abs(a - b) < 5e-3 for a, b in zip(vals, PAPER[k]))
+        paper_vals = PAPER.get(k)
+        if paper_vals is None:
+            # rows beyond the published table (e.g. the self-refresh
+            # retention current): modelled, not paper-checkable
+            rows.append(f"{k},{','.join(str(v) for v in vals)},"
+                        f"model-extension")
+            continue
+        match = all(abs(a - b) < 5e-3 for a, b in zip(vals, paper_vals))
         rows.append(f"{k},{','.join(str(v) for v in vals)},{match}")
-        assert match, (k, vals, PAPER[k])
+        assert match, (k, vals, paper_vals)
+    # every published row must still be reproduced
+    assert set(PAPER) <= set(ours), sorted(set(PAPER) - set(ours))
     return rows
 
 

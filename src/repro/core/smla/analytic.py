@@ -13,7 +13,8 @@ from repro.core.smla import engine as engine_mod
 from repro.core.smla import policies as policies_mod
 from repro.core.smla import sweep as sweep_mod
 from repro.core.smla.config import (IOModel, RankOrg, RefreshGranularity,
-                                    StackConfig, paper_configs)
+                                    RowPolicy, SelfRefreshPolicy, StackConfig,
+                                    paper_configs)
 from repro.core.smla.engine import CoreParams, simulate
 from repro.core.smla.traces import WORKLOADS, WorkloadSpec, core_traces
 
@@ -65,27 +66,46 @@ def estimate_service_cycles(stack: StackConfig, traces: dict,
     queues (bus occupancy per group incl. the write-to-read turnaround
     each write arms, activate latency per bank incl. write recovery) —
     plus one request latency of tail, inflated by the refresh-
-    unavailability factor.  Used by `sweep.run_sweep` to *order* cells
-    into makespan buckets and to derive per-bucket chunk widths, so
-    relative accuracy across configs is what matters most — but the
-    default paper grid also pins it as a true upper bound on the
-    measured makespan (`tests/test_sweep.py::
-    test_estimate_upper_bounds_default_grid`), so engine changes that
-    break the bound are flagged, not absorbed."""
+    unavailability factor.
+
+    Policy/queue awareness (each term falls back to the historical value
+    under the defaults, keeping the default-grid calibration unchanged):
+    closed-page writes trail an extra tRP auto-precharge; under the
+    self-refresh policy every miss may additionally pay the t_xsr wake
+    of a self-refreshed rank; and a controller queue smaller than the
+    core count (`core.q_size`, MSHR-capped) serialises the per-core
+    chains *through* the queue — ceil(n_cores / reachable-occupancy)
+    chain interleaving plus the round-robin slot turnaround.
+
+    Used by `sweep.run_sweep` to *order* cells into makespan buckets and
+    to derive per-bucket chunk widths, so relative accuracy across
+    configs is what matters most — but the paper grid also pins it as a
+    true upper bound on the measured makespan across every policy preset
+    and small queue depths (`tests/test_sweep.py::
+    test_estimate_upper_bounds_*`), so engine changes that break the
+    bound are flagged, not absorbed."""
     n_cores, n_req = np.shape(traces["inst"])
     total = n_cores * n_req
     lat, dur_mean, dur_max, refresh = _timing_view(stack)
     wr = _write_frac(traces)
-    wr_cost = wr * (stack.t_wr + stack.t_wtr)
+    wr_extra = (stack.t_rp if stack.policy.row == RowPolicy.CLOSED_PAGE
+                else 0)
+    wr_cost = wr * (stack.t_wr + stack.t_wtr + wr_extra)
+    sr_cost = (stack.t_xsr if stack.policy.self_refresh
+               == SelfRefreshPolicy.ENABLED else 0)
     n_groups = (1 if stack.io_model == IOModel.BASELINE
                 or stack.rank_org == RankOrg.MLR else stack.n_ranks)
     bus = total * (dur_mean + wr * stack.t_wtr) / max(n_groups, 1)
     bank = total * (lat + wr * stack.t_wr) / max(stack.banks_total, 1)
     arrival = float(np.max(np.asarray(traces["inst"])[:, -1])) \
         / core.inst_per_fast_cycle
-    core_serial = n_req * (lat + dur_max + wr_cost)
+    capq = max(min(core.q_size, n_cores * core.mshr), 1)
+    chain_mult = -(-n_cores // capq)          # 1 whenever q_size >= cores
+    resid = (lat + dur_max + wr_cost + sr_cost
+             + (n_cores if chain_mult > 1 else 0))
+    core_serial = n_req * chain_mult * resid
     return (arrival + core_serial + max(bus, bank)
-            + lat + dur_max) * refresh
+            + lat + dur_max + sr_cost) * refresh
 
 
 def default_horizon(cells: Sequence["sweep_mod.SweepCell"],
@@ -106,8 +126,12 @@ def default_horizon(cells: Sequence["sweep_mod.SweepCell"],
         arrival = float(np.max(np.asarray(c.traces["inst"])[:, -1])) \
             / core.inst_per_fast_cycle
         # +tWR+tWTR per request: a fully serialised write stream pays the
-        # recovery and turnaround on top of activate + transfer
-        serial = n_cores * n_req * (lat + dur_max
+        # recovery and turnaround on top of activate + transfer; under
+        # the self-refresh policy every request may also wake a
+        # self-refreshed rank (t_xsr)
+        xsr = (c.stack.t_xsr if c.stack.policy.self_refresh
+               == SelfRefreshPolicy.ENABLED else 0)
+        serial = n_cores * n_req * (lat + dur_max + xsr
                                     + c.stack.t_wr + c.stack.t_wtr)
         worst = max(worst, (arrival + serial) * refresh)
     chunk = engine_mod.DEFAULT_CHUNK

@@ -57,6 +57,22 @@ class WriteDrainPolicy(enum.IntEnum):
                           # no read is issuable (bus would otherwise idle)
 
 
+class SelfRefreshPolicy(enum.IntEnum):
+    OFF = 0           # power-down is the deepest rank state (the paper)
+    ENABLED = 1       # a rank idle past sr_idle_ns enters self-refresh:
+                      # deeper than power-down (clock stopped, retention
+                      # current only), tREFI deadlines suspend while inside,
+                      # exit charges t_xsr before the rank serves again
+
+
+class RefreshPostpone(enum.IntEnum):
+    STRICT = 0        # refresh on deadline (the paper's controller)
+    POSTPONE_8X = 1   # JEDEC-style 8x postpone: a due refresh defers while
+                      # demand is queued (per-rank debt counter, cap 8) and
+                      # owed refreshes pull in during idle or write-drain
+                      # shadow windows (drain-aware refresh scheduling)
+
+
 @dataclasses.dataclass(frozen=True)
 class ControllerPolicy:
     """One point of the controller-policy cross-product.
@@ -68,6 +84,8 @@ class ControllerPolicy:
     row: RowPolicy = RowPolicy.OPEN_PAGE
     refresh_gran: RefreshGranularity = RefreshGranularity.ALL_BANK
     write_drain: WriteDrainPolicy = WriteDrainPolicy.INLINE
+    self_refresh: SelfRefreshPolicy = SelfRefreshPolicy.OFF
+    ref_postpone: RefreshPostpone = RefreshPostpone.STRICT
 
     @property
     def is_default(self) -> bool:
@@ -75,7 +93,11 @@ class ControllerPolicy:
 
     @property
     def tag(self) -> str:
-        """Compact cell-name suffix, e.g. 'fcfs-closed-pb-oppdrain'."""
+        """Compact cell-name suffix, e.g. 'fcfs-closed-pb-oppdrain'.
+
+        The two refresh/power axes append ``-sr`` / ``-post8`` only when
+        non-default, so every pre-existing policy keeps its historical tag
+        (cell names in benchmark JSON stay comparable across commits)."""
         if self.is_default:
             return "default"
         sched = {SchedPolicy.FR_FCFS: "frfcfs", SchedPolicy.FCFS: "fcfs"}
@@ -85,8 +107,13 @@ class ControllerPolicy:
         drain = {WriteDrainPolicy.INLINE: "inline",
                  WriteDrainPolicy.DRAIN_WHEN_FULL: "fulldrain",
                  WriteDrainPolicy.OPPORTUNISTIC: "oppdrain"}
-        return "-".join((sched[self.scheduler], row[self.row],
-                         ref[self.refresh_gran], drain[self.write_drain]))
+        parts = [sched[self.scheduler], row[self.row],
+                 ref[self.refresh_gran], drain[self.write_drain]]
+        if self.self_refresh == SelfRefreshPolicy.ENABLED:
+            parts.append("sr")
+        if self.ref_postpone == RefreshPostpone.POSTPONE_8X:
+            parts.append("post8")
+        return "-".join(parts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +144,13 @@ class StackConfig:
     # Power-down: a rank with no open activity for `pd_idle_ns` is counted
     # in power-down (Table 1's 0.24 mA state) until its next use.
     pd_idle_ns: float = 30.0
+    # Self-refresh (active only under SelfRefreshPolicy.ENABLED): a rank
+    # idle past `sr_idle_ns` drops below power-down into self-refresh —
+    # clock stopped, retention current only (energy.SR_MA), external tREFI
+    # deadlines suspended.  The next request to the rank first pays the
+    # JEDEC-style exit latency `t_xsr_ns` (~tRFC + 7.5 ns re-lock).
+    sr_idle_ns: float = 250.0
+    t_xsr_ns: float = 137.5
     vdd: float = 1.2
     # Controller policy (scheduler x row policy x refresh granularity x
     # write drain).  The default reproduces the paper's fixed controller;
@@ -238,6 +272,8 @@ class StackConfig:
             "t_refi": np.int32(self.t_refi),
             "t_rfc": np.int32(self.t_rfc),
             "t_pd": np.int32(self.t_pd),
+            "t_sr": np.int32(self.t_sr),
+            "t_xsr": np.int32(self.t_xsr),
             "layers": np.int32(self.layers),
             "n_ranks": np.int32(R),
             "n_groups": np.int32(n_groups),
@@ -252,6 +288,8 @@ class StackConfig:
             "row_sel": np.int32(int(self.policy.row)),
             "ref_sel": np.int32(int(self.policy.refresh_gran)),
             "drain_sel": np.int32(int(self.policy.write_drain)),
+            "sr_sel": np.int32(int(self.policy.self_refresh)),
+            "post_sel": np.int32(int(self.policy.ref_postpone)),
         }
 
     @property
@@ -286,6 +324,16 @@ class StackConfig:
     @property
     def t_pd(self) -> int:
         return self.ns_to_cycles(self.pd_idle_ns)
+
+    @property
+    def t_sr(self) -> int:
+        """Self-refresh entry threshold in fast cycles."""
+        return self.ns_to_cycles(self.sr_idle_ns)
+
+    @property
+    def t_xsr(self) -> int:
+        """Self-refresh exit latency in fast cycles."""
+        return self.ns_to_cycles(self.t_xsr_ns)
 
 
 # The paper's evaluated configurations (Table 2), as a registry.

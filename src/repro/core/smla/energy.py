@@ -23,6 +23,12 @@ from repro.core.smla.config import IOModel, StackConfig
 
 _FREQS = np.array([200.0, 400.0, 800.0, 1600.0])
 PD_MA = 0.24
+#: self-refresh retention current (mA).  The paper's Table 1 stops at
+#: power-down; self-refresh is the deeper clock-stopped state (the per-
+#: layer IO clock domain is gated entirely, only the internal refresh
+#: oscillator and cell retention draw), modelled Table-1-style as a
+#: frequency-independent constant below the 0.24 mA power-down row.
+SR_MA = 0.18
 _PRE_STBY = np.array([4.24, 5.39, 6.54, 8.84])     # paper Table 1
 _ACT_STBY = np.array([7.33, 8.50, 9.67, 12.0])
 _E_ACTPRE = np.array([1.36, 1.37, 1.38, 1.41])
@@ -52,6 +58,7 @@ def table1(freqs=(200, 400, 800, 1600)) -> dict:
     """Reproduce the paper's Table 1 rows (exact at the published points)."""
     return {
         "Power-Down Current (mA)": [PD_MA for _ in freqs],
+        "Self-Refresh Current (mA)": [SR_MA for _ in freqs],
         "Precharge-Standby Current (mA)":
             [round(standby_current_ma(f, False), 2) for f in freqs],
         "Active-Standby Current (mA)":
@@ -75,48 +82,54 @@ class EnergyBreakdown:
 
 def energy_from_metrics(stack: StackConfig, metrics: dict,
                         n_wr: int | None = None,
-                        pd_frac: float | None = None) -> EnergyBreakdown:
+                        pd_frac: float | None = None,
+                        sr_frac: float | None = None) -> EnergyBreakdown:
     """EnergyBreakdown for one simulated cell's metrics dict (engine or
     sweep output): energy over the fixed-work makespan, with the measured
     bus utilisation splitting active- vs precharge-standby, the measured
-    write count pricing E_WR vs E_RD, and the measured power-down residency
-    pricing the 0.24 mA power-down state.  The explicit `n_wr` / `pd_frac`
-    arguments exist only to override the metrics (e.g. what-if analyses);
-    by default both come out of the simulation."""
+    write count pricing E_WR vs E_RD, and the measured power-down /
+    self-refresh residencies pricing the 0.24 mA power-down and the
+    deeper SR_MA retention state.  The explicit `n_wr` / `pd_frac` /
+    `sr_frac` arguments exist only to override the metrics (e.g. what-if
+    analyses); by default all come out of the simulation."""
     act_frac = float(np.clip(np.asarray(metrics["bus_util"]), 0.0, 1.0))
     if n_wr is None:
         n_wr = int(np.asarray(metrics.get("n_wr", 0)))
     if pd_frac is None:
         pd_frac = float(np.asarray(metrics.get("pd_frac", 0.0)))
+    if sr_frac is None:
+        sr_frac = float(np.asarray(metrics.get("sr_frac", 0.0)))
     n_served = int(np.asarray(metrics["served"]).sum())
     return stack_energy(stack, float(metrics["makespan_ns"]),
                         int(metrics["n_act"]),
                         n_served - n_wr,
-                        act_frac, n_wr, pd_frac=pd_frac)
+                        act_frac, n_wr, pd_frac=pd_frac, sr_frac=sr_frac)
 
 
 def stack_energy(stack: StackConfig, horizon_ns: float, n_act: int,
                  n_rd: int, active_frac: float, n_wr: int = 0,
-                 pd_frac: float = 0.0,
+                 pd_frac: float = 0.0, sr_frac: float = 0.0,
                  vdd: float | None = None) -> EnergyBreakdown:
     """Total stack energy over a simulated window.
 
     standby: per-layer clock-coupled current at that layer's frequency.
-    `pd_frac` of the window (the engine's measured power-down rank
-    residency) draws the Table-1 power-down current; the remainder splits
-    between active- and precharge-standby by `active_frac` (measured bus
-    utilisation, capped at the non-powered-down share).  ops:
-    frequency-decoupled ACT/RD/WR energy — identical across IO models, as
-    the paper observes (§8.4).
+    `sr_frac` of the window (the engine's measured self-refresh rank
+    residency) draws only the retention current SR_MA; `pd_frac` draws
+    the Table-1 power-down current; the remainder splits between active-
+    and precharge-standby by `active_frac` (measured bus utilisation,
+    capped at the share not in a deep state).  ops: frequency-decoupled
+    ACT/RD/WR energy — identical across IO models, as the paper observes
+    (§8.4).
     """
     v = stack.vdd if vdd is None else vdd
-    pd = float(np.clip(pd_frac, 0.0, 1.0))
-    act = min(float(np.clip(active_frac, 0.0, 1.0)), 1.0 - pd)
-    pre = max(1.0 - pd - act, 0.0)
+    sr = float(np.clip(sr_frac, 0.0, 1.0))
+    pd = min(float(np.clip(pd_frac, 0.0, 1.0)), 1.0 - sr)
+    act = min(float(np.clip(active_frac, 0.0, 1.0)), 1.0 - pd - sr)
+    pre = max(1.0 - sr - pd - act, 0.0)
     standby = 0.0
     for layer in range(stack.layers):
         f = stack.layer_freq_mhz(layer)
-        i_ma = (pd * PD_MA
+        i_ma = (sr * SR_MA + pd * PD_MA
                 + act * standby_current_ma(f, True)
                 + pre * standby_current_ma(f, False))
         standby += i_ma * v * horizon_ns * 1e-3          # pJ -> nJ

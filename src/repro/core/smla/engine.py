@@ -13,6 +13,10 @@ The per-cycle step is a fixed pipeline of composable **stage functions**
 * `_stage_refresh`   per-rank tREFI counters; a due rank (all-bank) or its
   round-robin target bank (per-bank) drains, then refreshes for tRFC —
   rows close, transfers stall.  tREFI == 0 disables refresh exactly.
+  Under JEDEC-style postponing a due refresh defers while demand is
+  queued (per-rank debt, cap 8) and owed refreshes pull in during idle
+  or write-drain shadow windows; a rank in self-refresh suspends its
+  deadlines entirely (it refreshes internally).
 * `_stage_enqueue`   round-robin one core per cycle into the controller
   queue (depth `CoreParams.q_size`; a full queue stalls the core — no
   request is ever dropped).
@@ -26,9 +30,12 @@ The per-cycle step is a fixed pipeline of composable **stage functions**
 * `_stage_retire`    completed transfers retire; MSHRs free.
 * `_stage_progress`  3-wide 3.2 GHz cores, MSHR-limited, instruction-
   window runahead (the paper's Table-3 core model).
-* `_stage_power`     power-down residency: a rank idle t_pd consecutive
-  cycles accumulates `pd_cycles`, so `energy.stack_energy` prices
-  Table 1's 0.24 mA with a *measured* residency.
+* `_stage_power`     power-down / self-refresh residency: a rank idle
+  t_pd consecutive cycles accumulates `pd_cycles`; under the self-
+  refresh policy a rank idle t_sr cycles (debt clear) drops deeper into
+  self-refresh (`sr_cycles`, exit charges t_xsr), so
+  `energy.stack_energy` prices Table 1's 0.24 mA power-down and the
+  deeper retention-only state with *measured* residencies.
 
 IO models (paper §4/§5): BASELINE (one full-width bus, 4L cycles/req),
 DEDICATED MLR (L cycles), DEDICATED SLR (per-rank W/L group, 4L cycles),
@@ -136,48 +143,96 @@ def _stage_refresh(st, aux, t, ctx):
     target bank must drain; the rank's other banks keep scheduling and
     transferring through the refresh (the NOM-style inter-bank window).
     New CAS issue to the draining target is blocked in `_stage_schedule`,
-    so the drain completes in bounded time either way."""
+    so the drain completes in bounded time either way.
+
+    Postponing (JEDEC 8x, `RefreshPostpone.POSTPONE_8X`): a deadline that
+    fires while the rank has queued *demand* (`policies.refresh_demand`:
+    any entry except writes held by an unarmed drain-when-full burst)
+    defers instead of draining — the per-rank debt counter records the
+    owed refresh, hard-capped at `policies.DEBT_CAP` (= 8), where the
+    strict drain-and-refresh behaviour resumes.  Owed refreshes pull in
+    one per tRFC as soon as the rank (target bank under per-bank) is
+    drained during an idle or write-shadow window; a pull-in repays debt
+    without advancing `ref_next`.  The chunked while-loop refuses to exit
+    while any debt remains, so debt provably drains to zero.
+
+    A rank in self-refresh refreshes internally: its external deadlines
+    are suspended here (never due) and restarted by `_stage_power` at
+    exit."""
     R, B, pol = ctx["R"], ctx["B"], ctx["pol"]
     qv, qphase, qr, qb = st["qv"], st["qphase"], st["qr"], st["qb"]
+    qwr = st["qwr"]
     bank_busy, bank_row = st["bank_busy"], st["bank_row"]
     ref_next, ref_until, ref_bank = (st["ref_next"], st["ref_until"],
                                      st["ref_bank"])
+    ref_debt, in_sr = st["ref_debt"], st["in_sr"]
     t_rfc_eff, t_refi_eff = ctx["t_rfc_eff"], ctx["t_refi_eff"]
 
-    ref_due = ctx["refresh_en"] & (t >= ref_next) & ctx["real_rank"]
+    ref_due = ctx["refresh_en"] & (t >= ref_next) & ctx["real_rank"] \
+        & ~in_sr
+    demand = policies.refresh_demand(pol, st["draining"], qv, qphase, qwr,
+                                     qr, R)
+    postpone = pol["postpone"] & ref_due & demand \
+        & (ref_debt < policies.DEBT_CAP)
+    ref_debt = ref_debt + jnp.where(postpone, 1, 0)
+    ref_next = jnp.where(postpone, ref_next + t_refi_eff, ref_next)
+    ref_due = ref_due & ~postpone
+
     in_flight_q = jnp.where(qv & (qphase >= 2), 1, 0)
     # all-bank drain condition: the whole rank idle, nothing in flight
     bank_idle = (bank_busy <= t).all(axis=1)
     in_flight = jax.ops.segment_sum(in_flight_q, qr, num_segments=R) > 0
-    start_ab = ref_due & bank_idle & ~in_flight
+    can_ab = bank_idle & ~in_flight
     # per-bank drain condition: only the target bank idle / drained
     in_flight_rb = jax.ops.segment_sum(in_flight_q, qr * B + qb,
                                        num_segments=R * B).reshape(R, B)
     ranks = jnp.arange(R, dtype=jnp.int32)
-    start_pb = ref_due & (bank_busy[ranks, ref_bank] <= t) \
+    can_pb = (bank_busy[ranks, ref_bank] <= t) \
         & ~(in_flight_rb[ranks, ref_bank] > 0)
-    ref_start = jnp.where(pol["per_bank"], start_pb, start_ab)
+    can_start = jnp.where(pol["per_bank"], can_pb, can_ab)
+    start_sched = ref_due & can_start
+    # drain-aware pull-in: an owed refresh executes while the rank has no
+    # demand and its target is drained (postpone and pull-in are mutually
+    # exclusive: one needs demand, the other its absence)
+    pull = pol["postpone"] & (ref_debt > 0) & ~demand & ~ref_due \
+        & can_start & ~in_sr
+    ref_start = start_sched | pull
+    ref_debt = ref_debt - jnp.where(pull, 1, 0)
 
     covered = ref_start[:, None] & policies.refresh_bank_mask(
         pol, ref_bank, B)
     bank_busy = jnp.where(covered, t + t_rfc_eff, bank_busy)
     bank_row = jnp.where(covered, -1, bank_row)          # rows close
     ref_until = jnp.where(covered, t + t_rfc_eff, ref_until)
-    ref_next = jnp.where(ref_start, ref_next + t_refi_eff, ref_next)
+    ref_next = jnp.where(start_sched, ref_next + t_refi_eff, ref_next)
     st["ref_bank"] = jnp.where(ref_start & pol["per_bank"],
                                (ref_bank + 1) % B, ref_bank)
     # counters accumulate only while work remains, so fixed-work metrics
     # cover the makespan, not the idle tail of the scan horizon.
+    # refresh_cycles accrues per cycle (one count per refresh event in
+    # progress: a whole rank under all-bank, a bank under per-bank), so a
+    # run completing mid-refresh counts only the cycles inside the
+    # makespan — charging the full tRFC at event start overcounted.
+    in_ref = ref_until > t
+    n_ref_ev = jnp.where(pol["per_bank"], in_ref.sum(),
+                         in_ref.all(axis=1).sum())
     st["refresh_cycles"] = st["refresh_cycles"] + jnp.where(
-        aux["work_left"], ref_start.sum() * t_rfc_eff, 0)
+        aux["work_left"], n_ref_ev, 0)
     # rank-cycles with EVERY bank under refresh: the whole-rank blackout
     # all-bank refresh imposes and per-bank refresh exists to avoid.
-    all_blocked = (ref_until > t).all(axis=1) & ctx["real_rank"]
+    all_blocked = in_ref.all(axis=1) & ctx["real_rank"]
     st["ref_rank_blocked"] = st["ref_rank_blocked"] + jnp.where(
         aux["work_left"], all_blocked.sum(), 0)
+    st["ref_postponed"] = st["ref_postponed"] + jnp.where(
+        aux["work_left"], postpone.sum(), 0)
+    st["ref_pulled_in"] = st["ref_pulled_in"] + jnp.where(
+        aux["work_left"], pull.sum(), 0)
+    # structural bound, tracked ungated: debt only decays once work is
+    # done (no demand -> no postpone), so the max is chunk-invariant
+    st["ref_debt_max"] = jnp.maximum(st["ref_debt_max"], ref_debt.max())
 
     st.update(bank_busy=bank_busy, bank_row=bank_row,
-              ref_next=ref_next, ref_until=ref_until)
+              ref_next=ref_next, ref_until=ref_until, ref_debt=ref_debt)
     aux["ref_due"] = ref_due
     aux["ref_target"] = ref_bank          # pre-increment round-robin target
     return st, aux
@@ -236,15 +291,28 @@ def _stage_schedule(st, aux, t, ctx):
     b_busy = bank_busy[qr, qb] <= t
     ref_blk = policies.cas_refresh_block(pol, aux["ref_due"],
                                          aux["ref_target"], qr, qb)
-    cand0 = qv & (qphase == 1) & b_busy & ~ref_blk
+    # a rank in self-refresh issues nothing until `_stage_power` has
+    # charged its t_xsr exit (all-False under the default policy)
+    cand0 = qv & (qphase == 1) & b_busy & ~ref_blk & ~st["in_sr"][qr]
 
-    # write-drain eligibility (inert under the default INLINE policy)
-    n_wq = jnp.where(qv & (qphase == 1) & qwr, 1, 0).sum()
-    draining = policies.update_drain_state(st["draining"], n_wq,
+    # write-drain eligibility (inert under the default INLINE policy).
+    # Two write counts with different jobs: the burst *hysteresis* arms
+    # on whole-queue write occupancy (any phase — the watermarks are
+    # fractions of reachable occupancy and an entry holds its slot until
+    # retire; counting phase-1 waiters only let fast-transfer configs
+    # race writes past phase 1 faster than they accumulated, so
+    # DRAIN_WHEN_FULL could never arm — bugfix), while OPPORTUNISTIC's
+    # low-watermark *eligibility* keeps measuring the waiting backlog
+    # (in-flight writes need no further issue decisions).
+    n_wq_wait = jnp.where(qv & (qphase == 1) & qwr, 1, 0).sum()
+    n_wq_occ = jnp.where(qv & qwr, 1, 0).sum()
+    draining = policies.update_drain_state(st["draining"], n_wq_occ,
                                            ctx["wq_hi"], ctx["wq_lo"])
+    st["n_drain_bursts"] = st["n_drain_bursts"] + jnp.where(
+        aux["work_left"] & draining & ~st["draining"], 1, 0)
     st["draining"] = draining
     any_read = (cand0 & ~qwr).any()
-    wr_ok = policies.write_eligible(pol, draining, n_wq, any_read,
+    wr_ok = policies.write_eligible(pol, draining, n_wq_wait, any_read,
                                     ctx["wq_lo"])
     cand = cand0 & (~qwr | wr_ok)
 
@@ -379,16 +447,42 @@ def _stage_progress(st, aux, t, ctx):
 
 
 def _stage_power(st, aux, t, ctx):
-    """Power-down residency: a real rank with no busy bank and no queued
-    request is idle; after t_pd consecutive idle cycles it is counted in
-    power-down."""
-    R = ctx["R"]
+    """Power-down and self-refresh residency.
+
+    A real rank with no busy bank and no queued request is idle; after
+    t_pd consecutive idle cycles it is counted in power-down.  Under
+    `SelfRefreshPolicy.ENABLED` a rank idle t_sr consecutive cycles with
+    no outstanding refresh debt drops below power-down into self-refresh:
+    it refreshes internally (`_stage_refresh` suspends its deadlines) and
+    stays there until a request targets it, at which point the exit
+    charges t_xsr before any bank can serve and the external deadline
+    restarts one full interval after the exit completes (the internal
+    refresh just covered the rank).  A self-refreshing rank-cycle counts
+    in sr_cycles and never also in pd_cycles — the two residencies (and
+    refresh blackout, which keeps banks busy) are disjoint by
+    construction."""
+    R, pol = ctx["R"], ctx["pol"]
     pending = jax.ops.segment_sum(jnp.where(st["qv"], 1, 0), st["qr"],
                                   num_segments=R) > 0
     rank_idle = (st["bank_busy"] <= t).all(axis=1) & ~pending \
         & ctx["real_rank"]
     st["idle_since"] = jnp.where(rank_idle, st["idle_since"], t + 1)
-    in_pd = rank_idle & ((t - st["idle_since"]) >= ctx["t_pd"])
+    idle_for = t - st["idle_since"]
+    enter = pol["sr"] & rank_idle & (idle_for >= ctx["t_sr"]) \
+        & (st["ref_debt"] == 0)
+    exit_ = st["in_sr"] & pending
+    in_sr = (st["in_sr"] | enter) & ~exit_
+    st["bank_busy"] = jnp.where(
+        exit_[:, None], jnp.maximum(st["bank_busy"], t + ctx["t_xsr"]),
+        st["bank_busy"])
+    st["ref_next"] = jnp.where(exit_, t + ctx["t_xsr"] + ctx["t_refi_eff"],
+                               st["ref_next"])
+    st["in_sr"] = in_sr
+    st["n_sr_exit"] = st["n_sr_exit"] + jnp.where(
+        aux["work_left"], exit_.sum(), 0)
+    st["sr_cycles"] = st["sr_cycles"] + jnp.where(
+        aux["work_left"], in_sr.sum(), 0)
+    in_pd = rank_idle & (idle_for >= ctx["t_pd"]) & ~in_sr
     st["pd_cycles"] = st["pd_cycles"] + jnp.where(
         aux["work_left"], in_pd.sum(), 0)
     return st, aux
@@ -431,6 +525,7 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         "t_rcd": params["t_rcd"], "t_rp": params["t_rp"],
         "t_cl": params["t_cl"], "t_wr": params["t_wr"],
         "t_wtr": params["t_wtr"], "t_pd": params["t_pd"],
+        "t_sr": params["t_sr"], "t_xsr": params["t_xsr"],
         "refresh_en": refresh_en,
         "t_refi_eff": t_refi_eff, "t_rfc_eff": t_rfc_eff,
         "dur": params["dur"], "group_of_rank": params["group_of_rank"],
@@ -475,6 +570,8 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
                   // jnp.maximum(params["n_ranks"], 1)).astype(i32),
         ref_until=jnp.zeros((R, B), i32),
         ref_bank=jnp.zeros(R, i32),
+        ref_debt=jnp.zeros(R, i32),
+        in_sr=jnp.zeros(R, bool),
         idle_since=jnp.zeros(R, i32),
         draining=jnp.zeros((), bool),
         c_inst=jnp.zeros(n_cores, jnp.float32),
@@ -484,7 +581,11 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         bus_cycles=jnp.zeros((), i32), wr_bus_cycles=jnp.zeros((), i32),
         n_wr=jnp.zeros((), i32), refresh_cycles=jnp.zeros((), i32),
         ref_rank_blocked=jnp.zeros((), i32),
+        ref_postponed=jnp.zeros((), i32), ref_pulled_in=jnp.zeros((), i32),
+        ref_debt_max=jnp.zeros((), i32),
         pd_cycles=jnp.zeros((), i32),
+        sr_cycles=jnp.zeros((), i32), n_sr_exit=jnp.zeros((), i32),
+        n_drain_bursts=jnp.zeros((), i32),
         n_grants=jnp.zeros((), i32), n_slot_grants=jnp.zeros((), i32),
     )
     # ---- chunked execution with early exit --------------------------------
@@ -507,7 +608,14 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
 
     def loop_cond(carry):
         s, k = carry
-        return (k < k_max) & (s["served"] < n_req).any()
+        # postponed-refresh debt must drain before the loop may exit: the
+        # post-makespan pull-ins run in these extra cycles with every
+        # fixed-work metric already frozen, so `ref_debt_end == 0` is a
+        # testable invariant under any chunk width.  Debt is identically
+        # zero under the default (strict) policy — the condition then
+        # reduces to the historical work-only predicate bit-for-bit.
+        return (k < k_max) & ((s["served"] < n_req).any()
+                              | (s["ref_debt"] > 0).any())
 
     def loop_body(carry):
         s, k = carry
@@ -545,9 +653,18 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         "wr_bus_cycles": final["wr_bus_cycles"],
         "refresh_cycles": final["refresh_cycles"],
         "ref_rank_blocked_cycles": final["ref_rank_blocked"],
+        "ref_postponed": final["ref_postponed"],
+        "ref_pulled_in": final["ref_pulled_in"],
+        "ref_debt_max": final["ref_debt_max"],
+        "ref_debt_end": final["ref_debt"].sum(),
         "pd_cycles": final["pd_cycles"],
         "pd_frac": (final["pd_cycles"].astype(jnp.float32)
                     / jnp.maximum(makespan_cycles * n_ranks_f, 1.0)),
+        "sr_cycles": final["sr_cycles"],
+        "sr_frac": (final["sr_cycles"].astype(jnp.float32)
+                    / jnp.maximum(makespan_cycles * n_ranks_f, 1.0)),
+        "n_sr_exit": final["n_sr_exit"],
+        "n_drain_bursts": final["n_drain_bursts"],
         "n_grants": final["n_grants"],
         "n_slot_grants": final["n_slot_grants"],
         "n_enqueued": final["c_next"].sum(),
@@ -572,7 +689,12 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
 _COMPILE_COUNT = [0]
 
 #: params every trace/param dict must carry; used to default legacy inputs.
-_TIMING_DEFAULTS = ("t_wr", "t_wtr", "t_refi", "t_rfc", "t_pd")
+_TIMING_DEFAULTS = ("t_wr", "t_wtr", "t_refi", "t_rfc", "t_pd", "t_sr",
+                    "t_xsr")
+
+#: timing keys whose legacy default is "never" (BIG), not "disabled" (0):
+#: an idleness threshold of 0 would mean *instant* power-down/self-refresh.
+_NEVER_DEFAULTS = ("t_pd", "t_sr")
 
 
 def compile_count() -> int:
@@ -600,18 +722,18 @@ def _with_wr(traces: dict) -> dict:
 
 
 def _with_timing_defaults(params: dict) -> dict:
-    """Default missing write/refresh timings to 0 (disabled), a missing
-    power-down threshold to effectively-never (t_pd = BIG; t_pd = 0 would
-    mean *instant* power-down), and missing policy selectors to the
-    paper's controller (all zeros): a legacy params dict must reproduce
-    the pre-write-era, pre-policy engine exactly."""
+    """Default missing write/refresh timings to 0 (disabled), missing
+    idleness thresholds to effectively-never (`_NEVER_DEFAULTS`), and
+    missing policy selectors to the paper's controller (all zeros): a
+    legacy params dict must reproduce the pre-write-era, pre-policy
+    engine exactly."""
     missing = [k for k in _TIMING_DEFAULTS if k not in params]
     missing += [k for k in policies.SELECTOR_KEYS if k not in params]
     if not missing:
         return params
     p = dict(params)
     for k in missing:
-        fill = BIG if k == "t_pd" else 0
+        fill = BIG if k in _NEVER_DEFAULTS else 0
         p[k] = jnp.full(np.shape(p["t_cl"]), fill, jnp.int32)
     return p
 

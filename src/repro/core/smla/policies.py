@@ -13,6 +13,11 @@ choice as a **traced int32 selector** carried in the engine's params dict:
 * ``ref_sel``    — `RefreshGranularity`: all-bank | per-bank round-robin
 * ``drain_sel``  — `WriteDrainPolicy`:   inline | drain-when-full |
                                           opportunistic low-watermark
+* ``sr_sel``     — `SelfRefreshPolicy`:  off | self-refresh entry (a rank
+                                          idle past t_sr drops below
+                                          power-down; exit charges t_xsr)
+* ``post_sel``   — `RefreshPostpone`:    strict deadline | JEDEC-style 8x
+                                          postpone with drain-aware pull-in
 
 Because the selectors are traced (not Python closure constants), one
 compiled engine program serves the whole policy cross-product with the
@@ -29,17 +34,26 @@ so draining writes outrank even row-hit reads, as real write bursts do.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.smla.config import (ControllerPolicy, RefreshGranularity,
-                                    RowPolicy, SchedPolicy, WriteDrainPolicy)
+                                    RefreshPostpone, RowPolicy, SchedPolicy,
+                                    SelfRefreshPolicy, WriteDrainPolicy)
 
 #: score/sentinel magnitude shared with the engine (engine.BIG aliases
 #: this) — the int32 score encoding above depends on it staying 2**30
 BIG = jnp.int32(2**30)
 
 #: params keys carrying the traced policy selectors, in to_params order
-SELECTOR_KEYS = ("sched_sel", "row_sel", "ref_sel", "drain_sel")
+SELECTOR_KEYS = ("sched_sel", "row_sel", "ref_sel", "drain_sel",
+                 "sr_sel", "post_sel")
+
+#: JEDEC maximum number of postponed refresh commands per rank (the "8x
+#: postpone" of LPDDR/DDR4): the engine's per-rank debt counter is capped
+#: here, tested as a hard invariant (`ref_debt_max <= DEBT_CAP`, debt
+#: drained to zero before the chunked loop may exit).
+DEBT_CAP = 8
 
 
 def t_rfc_per_bank(t_rfc):
@@ -80,10 +94,33 @@ POLICY_PRESETS: dict[str, ControllerPolicy] = {
         write_drain=WriteDrainPolicy.DRAIN_WHEN_FULL),
     "opportunistic_drain": ControllerPolicy(
         write_drain=WriteDrainPolicy.OPPORTUNISTIC),
+    "self_refresh": ControllerPolicy(
+        self_refresh=SelfRefreshPolicy.ENABLED),
+    "postpone_8x": ControllerPolicy(
+        ref_postpone=RefreshPostpone.POSTPONE_8X),
     "all_flipped": ControllerPolicy(
         scheduler=SchedPolicy.FCFS, row=RowPolicy.CLOSED_PAGE,
         refresh_gran=RefreshGranularity.PER_BANK,
-        write_drain=WriteDrainPolicy.OPPORTUNISTIC),
+        write_drain=WriteDrainPolicy.OPPORTUNISTIC,
+        self_refresh=SelfRefreshPolicy.ENABLED,
+        ref_postpone=RefreshPostpone.POSTPONE_8X),
+}
+
+#: the refresh/power corner of the cross-product, as one named axis for
+#: `benchmarks/paper_fig_refresh.py`: the paper's controller, each new
+#: refresh/power knob alone, their combination, and per-bank + postpone
+#: (postponed refreshes pulled in at per-bank granularity — the fully
+#: drain-aware scheduler).
+REFRESH_PRESETS: dict[str, ControllerPolicy] = {
+    "default": PAPER_DEFAULT,
+    "self_refresh": POLICY_PRESETS["self_refresh"],
+    "postpone_8x": POLICY_PRESETS["postpone_8x"],
+    "sr_postpone": ControllerPolicy(
+        self_refresh=SelfRefreshPolicy.ENABLED,
+        ref_postpone=RefreshPostpone.POSTPONE_8X),
+    "pb_postpone": ControllerPolicy(
+        refresh_gran=RefreshGranularity.PER_BANK,
+        ref_postpone=RefreshPostpone.POSTPONE_8X),
 }
 
 
@@ -107,6 +144,8 @@ def selector_view(params: dict) -> dict:
         == int(WriteDrainPolicy.DRAIN_WHEN_FULL),
         "drain_opp": params["drain_sel"]
         == int(WriteDrainPolicy.OPPORTUNISTIC),
+        "sr": params["sr_sel"] == int(SelfRefreshPolicy.ENABLED),
+        "postpone": params["post_sel"] == int(RefreshPostpone.POSTPONE_8X),
     }
 
 
@@ -131,6 +170,18 @@ def refresh_bank_mask(pol: dict, ref_bank, banks: int):
     window)."""
     one_hot = jnp.arange(banks, dtype=jnp.int32)[None, :] == ref_bank[:, None]
     return jnp.where(pol["per_bank"], one_hot, True)
+
+
+def refresh_demand(pol: dict, draining, qv, qphase, qwr, qr, n_ranks: int):
+    """(R,) mask: does rank r have *demand* a postponed refresh would
+    serve sooner?  Demand is any valid queue entry for the rank — except
+    writes currently held by an unarmed drain-when-full policy: while the
+    burst is not armed those writes are not issuable anyway, so the
+    write-shadow window is exactly where owed refreshes pull in (the
+    ROADMAP's drain-aware refresh scheduling)."""
+    held_wr = pol["drain_full"] & ~draining
+    counted = jnp.where(qv & (qphase >= 1) & ~(qwr & held_wr), 1, 0)
+    return jax.ops.segment_sum(counted, qr, num_segments=n_ranks) > 0
 
 
 def cas_refresh_block(pol: dict, ref_due, ref_bank, qr, qb):

@@ -61,8 +61,11 @@ from repro.core.smla.traces import (WorkloadSpec, core_traces, pad_traces,
 SCALAR_METRICS = ("bandwidth_gbps", "n_act", "n_row_conflicts", "bus_util",
                   "horizon_ns", "makespan_ns", "n_wr", "bus_cycles",
                   "wr_bus_cycles", "refresh_cycles", "ref_rank_blocked_cycles",
-                  "pd_cycles", "pd_frac", "n_grants", "n_slot_grants",
-                  "n_enqueued", "n_outstanding", "chunks_run")
+                  "ref_postponed", "ref_pulled_in", "ref_debt_max",
+                  "ref_debt_end", "pd_cycles", "pd_frac", "sr_cycles",
+                  "sr_frac", "n_sr_exit", "n_drain_bursts", "n_grants",
+                  "n_slot_grants", "n_enqueued", "n_outstanding",
+                  "chunks_run")
 
 #: scan-chunk widths ``chunk="auto"`` picks from, per bucket: the smallest
 #: width >= est/AUTO_CHUNK_TARGET so a bucket runs ~AUTO_CHUNK_TARGET

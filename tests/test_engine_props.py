@@ -20,7 +20,9 @@ import pytest
 from repro.core.smla import energy as E
 from repro.core.smla import engine, policies
 from repro.core.smla.config import (ControllerPolicy, RefreshGranularity,
-                                    RowPolicy, StackConfig, paper_configs)
+                                    RefreshPostpone, RowPolicy,
+                                    SelfRefreshPolicy, StackConfig,
+                                    paper_configs)
 from repro.core.smla.engine import simulate
 from repro.core.smla.traces import (WorkloadSpec, core_traces,
                                     lm_serving_trace, synthetic_trace)
@@ -96,9 +98,30 @@ def _check_invariants(stack: StackConfig, m: dict, traces: dict):
     if stack.policy.row == RowPolicy.CLOSED_PAGE:
         assert int(m["n_row_conflicts"]) == 0
 
-    # power-down residency is a fraction of rank-cycles over the makespan
+    # refresh accounting fix, pinned: per-cycle accrual never exceeds one
+    # count per rank per makespan cycle
+    assert int(m["refresh_cycles"]) <= mk_cyc * stack.n_ranks
+
+    # JEDEC postpone debt: bounded by the cap, and fully repaid unless
+    # the horizon cut the drain short (the loop then reports running to
+    # its chunk bound)
+    assert 0 <= int(m["ref_debt_max"]) <= policies.DEBT_CAP
+    assert int(m["ref_debt_end"]) == 0 or int(m["chunks_run"]) \
+        == engine.n_chunks(HORIZON, engine.DEFAULT_CHUNK)
+    assert int(m["ref_postponed"]) >= 0 and int(m["ref_pulled_in"]) >= 0
+    if stack.policy.ref_postpone == RefreshPostpone.STRICT:
+        assert int(m["ref_postponed"]) == 0 and int(m["ref_debt_max"]) == 0
+
+    # deep-state residencies partition rank-cycles: power-down,
+    # self-refresh, and whole-rank refresh blackout are pairwise disjoint
+    # by construction, so no rank-cycle is ever double-counted
     assert -1e-6 <= float(m["pd_frac"]) <= 1.0 + 1e-6
-    assert int(m["pd_cycles"]) <= mk_cyc * stack.n_ranks
+    assert -1e-6 <= float(m["sr_frac"]) <= 1.0 + 1e-6
+    assert float(m["pd_frac"]) + float(m["sr_frac"]) <= 1.0 + 1e-6
+    assert (int(m["pd_cycles"]) + int(m["sr_cycles"])
+            + int(m["ref_rank_blocked_cycles"])) <= mk_cyc * stack.n_ranks
+    if stack.policy.self_refresh == SelfRefreshPolicy.OFF:
+        assert int(m["sr_cycles"]) == 0 and int(m["n_sr_exit"]) == 0
 
     # chunked execution ran at least one chunk and never past the horizon
     assert 1 <= int(m["chunks_run"]) <= -(-HORIZON // 1)
@@ -204,7 +227,8 @@ def test_legacy_params_without_write_refresh_timings():
     traces = core_traces(0, [spec] * N_CORES, N_REQ, sc.n_ranks,
                          sc.banks_per_rank)
     p = sc.to_params()
-    for k in ("t_wr", "t_wtr", "t_refi", "t_rfc", "t_pd"):
+    for k in ("t_wr", "t_wtr", "t_refi", "t_rfc", "t_pd", "t_sr", "t_xsr",
+              "sr_sel", "post_sel"):
         del p[k]
     p["n_req"] = np.int32(N_REQ)
     out = engine.batched_simulate(
@@ -373,6 +397,35 @@ if HAVE_HYPOTHESIS:
                                   np.asarray(full[k])), (cname, chunk, k)
         assert 1 <= int(m["chunks_run"]) <= -(-HORIZON // min(chunk,
                                                               HORIZON))
+
+    @_PROP_SETTINGS
+    @hypothesis.given(
+        cname=st.sampled_from(sorted(paper_configs(4))),
+        mpki=st.sampled_from([0.5, 5.0, 40.0]),
+        write_frac=st.sampled_from([0.0, 0.4]),
+        refi_ns=st.sampled_from([400.0, 1500.0]),
+        seed=st.integers(0, 50),
+    )
+    def test_deep_state_accounting_random(cname, mpki, write_frac, refi_ns,
+                                          seed):
+        """Property form of the refresh/power interaction invariants:
+        under the combined self-refresh + postpone policy, for random
+        configs and traces, no rank-cycle is double-counted across
+        power-down, self-refresh, and refresh blackout; debt never
+        exceeds the JEDEC cap and is repaid before the loop exits."""
+        stack = dataclasses.replace(
+            paper_configs(4)[cname], t_refi_ns=refi_ns,
+            policy=ControllerPolicy(
+                self_refresh=SelfRefreshPolicy.ENABLED,
+                ref_postpone=RefreshPostpone.POSTPONE_8X))
+        spec = WorkloadSpec("w", mpki, 0.5, write_frac=write_frac)
+        m, traces = _run(stack, spec, seed)
+        _check_invariants(stack, m, traces)
+        mk_cyc = round(float(m["makespan_ns"]) / stack.unit_ns)
+        assert (int(m["pd_cycles"]) + int(m["sr_cycles"])
+                + int(m["ref_rank_blocked_cycles"])) \
+            <= mk_cyc * stack.n_ranks
+        assert int(m["ref_debt_max"]) <= policies.DEBT_CAP
 
     @_PROP_SETTINGS
     @hypothesis.given(mpki=st.sampled_from([5.0, 40.0]),

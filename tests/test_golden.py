@@ -37,9 +37,14 @@ GRID_WORKLOADS = (WORKLOADS[4], WORKLOADS[26])      # low.05, stream.1
 
 INT_METRICS = ("n_act", "n_row_conflicts", "n_wr", "bus_cycles",
                "wr_bus_cycles", "refresh_cycles", "pd_cycles", "n_grants",
-               "n_slot_grants", "n_enqueued", "n_outstanding")
-FLOAT_METRICS = ("bandwidth_gbps", "bus_util", "pd_frac", "makespan_ns",
-                 "horizon_ns")
+               "n_slot_grants", "n_enqueued", "n_outstanding",
+               # refresh/power subsystem counters — identically zero under
+               # the default policy, pinned so the golden grid also guards
+               # the new machinery's bit-identity when disabled
+               "ref_postponed", "ref_pulled_in", "ref_debt_max",
+               "ref_debt_end", "sr_cycles", "n_sr_exit")
+FLOAT_METRICS = ("bandwidth_gbps", "bus_util", "pd_frac", "sr_frac",
+                 "makespan_ns", "horizon_ns")
 RTOL = 1e-6
 
 
@@ -121,3 +126,13 @@ def test_golden_exercises_new_machinery():
     slotted = [c for n, c in golden.items() if "cascaded_slr" in n]
     assert slotted and all(c["n_slot_grants"] == c["n_grants"]
                            for c in slotted)
+    # the default-policy grid must pin the refresh/power machinery OFF
+    assert all(c["sr_cycles"] == 0 and c["ref_debt_max"] == 0
+               for c in golden.values())
+    # the refresh accounting fix, pinned at grid level: per-cycle accrual
+    # never exceeds one count per rank per makespan cycle
+    for name, c in golden.items():
+        layers_s, cname = name.split("/")[:2]
+        sc = paper_configs(int(layers_s[1:]))[cname]
+        mk_cyc = c["makespan_ns"] / sc.unit_ns
+        assert c["refresh_cycles"] <= mk_cyc * sc.n_ranks, name

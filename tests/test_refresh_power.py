@@ -1,0 +1,360 @@
+"""Refresh-management & deep power-state subsystem: self-refresh entry /
+exit, JEDEC 8x refresh postponing with drain-aware pull-in, and the
+drain-burst arming fix.
+
+Contracts, mirroring tests/test_policies.py for the two new axes:
+* both selectors are *traced* — flipping them never recompiles, and the
+  default values reproduce the pre-subsystem engine (golden-pinned);
+* self-refresh is a real deeper state: it engages only after t_sr idle
+  cycles, suspends external refresh deadlines, charges t_xsr on exit,
+  and its residency is disjoint from power-down;
+* postponed refresh debt is hard-capped at policies.DEBT_CAP and always
+  repaid (the chunked loop refuses to exit with debt outstanding);
+* DRAIN_WHEN_FULL actually arms on fast-transfer configs at small queue
+  depths (the watermark/occupancy mismatch bugfix).
+
+(No hypothesis dependency — this module must run in a bare environment;
+the randomised tier lives in tests/test_engine_props.py.)"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.smla import energy as E
+from repro.core.smla import engine, policies, sweep
+from repro.core.smla.config import (ControllerPolicy, RefreshPostpone,
+                                    SelfRefreshPolicy, StackConfig,
+                                    WriteDrainPolicy, paper_configs)
+from repro.core.smla.engine import CoreParams, simulate
+from repro.core.smla.traces import WorkloadSpec, core_traces
+
+N_CORES = 2
+N_REQ = 80
+HORIZON = 30_000          # generous: policy runs must complete fixed work
+
+#: refresh tightened so the machinery fires many times inside the horizon
+#: (stock tREFI fires once or twice in a trace this short)
+WRITE_SPEC = WorkloadSpec("w", 25.0, 0.5, write_frac=0.4)
+#: idle-heavy single-request-stream: long per-rank idle gaps, the regime
+#: self-refresh exists for
+IDLE_SPEC = WorkloadSpec("idle", 0.5, 0.6)
+
+SR = ControllerPolicy(self_refresh=SelfRefreshPolicy.ENABLED)
+POST = ControllerPolicy(ref_postpone=RefreshPostpone.POSTPONE_8X)
+SR_POST = ControllerPolicy(self_refresh=SelfRefreshPolicy.ENABLED,
+                           ref_postpone=RefreshPostpone.POSTPONE_8X)
+
+
+def _stack(cname="baseline", **over):
+    sc = dataclasses.replace(paper_configs(4)[cname], t_refi_ns=1500.0)
+    return dataclasses.replace(sc, **over) if over else sc
+
+
+def _run(stack: StackConfig, seed=5, spec=WRITE_SPEC, horizon=HORIZON,
+         core=CoreParams(), n_cores=N_CORES):
+    traces = core_traces(seed, [spec] * n_cores, N_REQ, stack.n_ranks,
+                         stack.banks_per_rank)
+    return simulate(stack, traces, horizon, core), traces
+
+
+# ----------------------------------------------------------------------------
+# traced selectors: the enlarged cross-product costs zero extra compiles
+# ----------------------------------------------------------------------------
+
+def test_new_selectors_are_traced():
+    """Flipping self-refresh / postpone (alone or with every other axis)
+    must reuse the default policy's compiled executable."""
+    stack = _stack()
+    traces = core_traces(0, [WRITE_SPEC] * N_CORES, N_REQ, stack.n_ranks,
+                         stack.banks_per_rank)
+    simulate(stack, traces, HORIZON)                  # warm (may compile)
+    engine.reset_compile_count()
+    for pol in (SR, POST, SR_POST,
+                *policies.REFRESH_PRESETS.values(),
+                policies.POLICY_PRESETS["all_flipped"]):
+        simulate(dataclasses.replace(stack, policy=pol), traces, HORIZON)
+    assert engine.compile_count() == 0, \
+        "a refresh/power selector leaked into the static compile signature"
+
+
+def test_to_params_carries_new_selectors_and_timings():
+    p = dataclasses.replace(paper_configs(4)["baseline"],
+                            policy=SR_POST).to_params()
+    assert p["sr_sel"] == int(SelfRefreshPolicy.ENABLED)
+    assert p["post_sel"] == int(RefreshPostpone.POSTPONE_8X)
+    assert p["t_sr"] > 0 and p["t_xsr"] > 0
+    d = paper_configs(4)["baseline"].to_params()
+    assert d["sr_sel"] == 0 and d["post_sel"] == 0
+
+
+def test_refresh_power_tags():
+    assert SR.tag == "frfcfs-open-ab-inline-sr"
+    assert POST.tag == "frfcfs-open-ab-inline-post8"
+    assert SR_POST.tag == "frfcfs-open-ab-inline-sr-post8"
+    # pre-existing policies keep their historical tags
+    assert policies.POLICY_PRESETS["closed_page"].tag \
+        == "frfcfs-closed-ab-inline"
+    assert policies.POLICY_PRESETS["all_flipped"].tag \
+        == "fcfs-closed-pb-oppdrain-sr-post8"
+    assert ControllerPolicy().tag == "default"
+
+
+# ----------------------------------------------------------------------------
+# self-refresh
+# ----------------------------------------------------------------------------
+
+def test_self_refresh_engages_on_idle_workload():
+    """An idle-heavy stream puts ranks into self-refresh: residency and
+    exits are measured, disjoint from power-down, and every wake charges
+    t_xsr — the makespan can only grow vs the default policy."""
+    m0, traces = _run(_stack(), spec=IDLE_SPEC, horizon=60_000)
+    m1 = simulate(_stack(policy=SR), traces, 60_000)
+    assert bool(np.asarray(m1["complete"]).all())
+    assert int(m1["sr_cycles"]) > 0 and int(m1["n_sr_exit"]) > 0
+    assert 0.0 < float(m1["sr_frac"]) <= 1.0
+    assert float(m1["pd_frac"]) + float(m1["sr_frac"]) <= 1.0 + 1e-6
+    # self-refresh absorbs residency that was power-down under default
+    assert float(m1["pd_frac"]) < float(m0["pd_frac"])
+    assert float(m1["makespan_ns"]) >= float(m0["makespan_ns"])
+    # default never self-refreshes
+    assert int(m0["sr_cycles"]) == 0 and int(m0["n_sr_exit"]) == 0
+
+
+def test_self_refresh_reduces_standby_energy_when_idle():
+    """The subsystem's point (paper §4.2 energy direction): on an
+    idle-heavy workload a multi-rank stack in self-refresh spends less
+    standby energy than the default power-down-only controller — the
+    retention current undercuts power-down plus the periodic refresh
+    kicks that yank ranks out of it."""
+    sc = _stack(t_refi_ns=1200.0)
+    traces = core_traces(2, [IDLE_SPEC], N_REQ, sc.n_ranks,
+                         sc.banks_per_rank)
+    m0 = simulate(sc, traces, 60_000)
+    m1 = simulate(dataclasses.replace(sc, policy=SR), traces, 60_000)
+    assert bool(np.asarray(m1["complete"]).all())
+    e0 = E.energy_from_metrics(sc, m0)
+    e1 = E.energy_from_metrics(dataclasses.replace(sc, policy=SR), m1)
+    assert e1.standby_nj < e0.standby_nj, \
+        (e1.standby_nj, e0.standby_nj, float(m1["sr_frac"]))
+
+
+def test_self_refresh_suspends_deadlines():
+    """While a rank self-refreshes, its external tREFI deadlines are
+    suspended (the device refreshes internally): fewer external refresh
+    events fire than under the default policy on the same trace."""
+    m0, traces = _run(_stack(), spec=IDLE_SPEC, horizon=60_000)
+    m1 = simulate(_stack(policy=SR), traces, 60_000)
+    assert int(m0["refresh_cycles"]) > 0
+    assert int(m1["refresh_cycles"]) < int(m0["refresh_cycles"])
+
+
+def test_self_refresh_unreachable_threshold_is_exact_noop():
+    """With t_sr beyond the horizon the policy never engages and every
+    metric reproduces the default run bit-for-bit."""
+    m0, traces = _run(_stack(), spec=IDLE_SPEC)
+    m1 = simulate(_stack(sr_idle_ns=1e9, policy=SR), traces, HORIZON)
+    for k in m0:
+        assert np.array_equal(np.asarray(m0[k]), np.asarray(m1[k])), k
+
+
+def test_self_refresh_conserves_work():
+    """Waking ranks must not lose requests on any IO model."""
+    for cname in paper_configs(4):
+        m0, traces = _run(_stack(cname), spec=IDLE_SPEC, horizon=60_000)
+        m1 = simulate(_stack(cname, policy=SR), traces, 60_000)
+        assert bool(np.asarray(m1["complete"]).all()), cname
+        assert np.array_equal(np.asarray(m1["served"]),
+                              np.asarray(m0["served"])), cname
+        assert int(m1["n_wr"]) == int(m0["n_wr"]), cname
+
+
+# ----------------------------------------------------------------------------
+# refresh postponing (JEDEC 8x)
+# ----------------------------------------------------------------------------
+
+def test_postpone_defers_and_repays():
+    """Under demand a due refresh defers (debt grows, capped at 8) and
+    every owed refresh is repaid: debt is zero by the time the chunked
+    loop exits, on every IO model."""
+    for cname in paper_configs(4):
+        m0, traces = _run(_stack(cname))
+        m1 = simulate(_stack(cname, policy=POST), traces, HORIZON)
+        assert bool(np.asarray(m1["complete"]).all()), cname
+        assert int(m1["ref_postponed"]) > 0, cname
+        assert 1 <= int(m1["ref_debt_max"]) <= policies.DEBT_CAP, cname
+        assert int(m1["ref_debt_end"]) == 0, cname
+        assert int(m1["refresh_cycles"]) > 0, cname
+        # fixed work is conserved; default runs carry no debt machinery
+        assert np.array_equal(np.asarray(m1["served"]),
+                              np.asarray(m0["served"])), cname
+        for k in ("ref_postponed", "ref_pulled_in", "ref_debt_max",
+                  "ref_debt_end"):
+            assert int(m0[k]) == 0, (cname, k)
+
+
+def test_postpone_debt_cap_binds_under_saturation():
+    """A saturating stream with an aggressive refresh cadence drives the
+    debt counter to the JEDEC cap — and never past it."""
+    sc = _stack(t_refi_ns=400.0, policy=POST)
+    spec = WorkloadSpec("hot", 200.0, 0.8, write_frac=0.3)
+    m, _ = _run(sc, spec=spec, horizon=60_000)
+    assert int(m["ref_debt_max"]) == policies.DEBT_CAP
+    assert int(m["ref_debt_end"]) == 0
+    assert bool(np.asarray(m["complete"]).all())
+
+
+def test_postpone_defers_blackout_out_of_busy_period():
+    """What postponing is for: on an intense workload the whole-rank
+    blackout cycles that land inside the (work-gated) makespan shrink —
+    owed refreshes move into idle windows."""
+    sc = _stack()
+    spec = WorkloadSpec("hot", 80.0, 0.5, write_frac=0.3)
+    m0, traces = _run(sc, spec=spec, horizon=60_000)
+    m1 = simulate(dataclasses.replace(sc, policy=POST), traces, 60_000)
+    assert int(m1["ref_postponed"]) > 0
+    assert int(m1["ref_rank_blocked_cycles"]) <= \
+        int(m0["ref_rank_blocked_cycles"])
+
+
+def test_postpone_respects_refresh_disabled():
+    m, _ = _run(_stack(refresh=False, policy=POST))
+    for k in ("refresh_cycles", "ref_postponed", "ref_pulled_in",
+              "ref_debt_max", "ref_debt_end"):
+        assert int(m[k]) == 0, k
+
+
+# ----------------------------------------------------------------------------
+# drain-burst arming (the watermark/occupancy mismatch bugfix)
+# ----------------------------------------------------------------------------
+
+def test_drain_when_full_arms_on_fast_transfer_small_queue():
+    """A write-heavy trace through a q_size=8 queue on a fast-transfer
+    config must actually enter a drain burst: the high watermark is
+    derived from total reachable occupancy, so the in-queue write count
+    must span all phases — counting phase-1 waiters only, fast transfers
+    raced writes past the watermark and DRAIN_WHEN_FULL never armed."""
+    core = CoreParams(q_size=8)
+    spec = WorkloadSpec("wr", 60.0, 0.3, write_frac=0.5)
+    for cname in ("cascaded_mlr", "dedicated_mlr"):
+        sc = _stack(cname, refresh=False)
+        m_in, traces = _run(sc, spec=spec, core=core)
+        dr = dataclasses.replace(sc, policy=ControllerPolicy(
+            write_drain=WriteDrainPolicy.DRAIN_WHEN_FULL))
+        m_dr = simulate(dr, traces, HORIZON, core)
+        assert bool(np.asarray(m_dr["complete"]).all()), cname
+        assert int(m_dr["n_drain_bursts"]) >= 1, \
+            f"{cname}: DRAIN_WHEN_FULL never armed at q_size=8"
+        # burst service must demonstrably reorder vs inline ...
+        diverged = [k for k in m_in
+                    if not np.array_equal(np.asarray(m_dr[k]),
+                                          np.asarray(m_in[k]))]
+        assert "makespan_ns" in diverged or "n_act" in diverged, cname
+        # ... while conserving every write
+        assert int(m_dr["n_wr"]) == int(m_in["n_wr"]) \
+            == int(traces["wr"].sum()), cname
+
+
+# ----------------------------------------------------------------------------
+# interactions and accounting
+# ----------------------------------------------------------------------------
+
+def test_deep_state_residencies_are_disjoint():
+    """pd, sr, and whole-rank refresh blackout partition rank-cycles:
+    their sum never exceeds the makespan budget, under the combined
+    policy on every IO model."""
+    for cname in paper_configs(4):
+        sc = _stack(cname, policy=SR_POST)
+        m, _ = _run(sc, spec=IDLE_SPEC, horizon=60_000)
+        mk_cyc = round(float(m["makespan_ns"]) / sc.unit_ns)
+        budget = mk_cyc * sc.n_ranks
+        used = (int(m["pd_cycles"]) + int(m["sr_cycles"])
+                + int(m["ref_rank_blocked_cycles"]))
+        assert used <= budget, (cname, used, budget)
+        assert float(m["pd_frac"]) + float(m["sr_frac"]) <= 1.0 + 1e-6
+        assert int(m["ref_debt_end"]) == 0
+
+
+def test_refresh_cycles_accrual_bounded_by_makespan():
+    """The accounting fix, pinned: per-cycle accrual can never exceed
+    one count per rank per makespan cycle (the old event-start charge
+    could, when a run completed mid-refresh)."""
+    for pol in (ControllerPolicy(), POST, SR,
+                policies.POLICY_PRESETS["per_bank_refresh"]):
+        sc = _stack(t_refi_ns=400.0, policy=pol)
+        m, _ = _run(sc)
+        mk_cyc = round(float(m["makespan_ns"]) / sc.unit_ns)
+        assert int(m["refresh_cycles"]) <= mk_cyc * sc.n_ranks, pol.tag
+
+
+def test_energy_prices_self_refresh_residency():
+    """Table-1-style pricing of the new state: a full self-refresh
+    window draws exactly layers * SR_MA, an sr_frac override changes
+    only the standby term, and self-refresh undercuts power-down."""
+    sc = paper_configs(4)["baseline"]
+    t_ns = 1e6
+    full_sr = E.stack_energy(sc, t_ns, n_act=0, n_rd=0, active_frac=0.0,
+                             sr_frac=1.0)
+    assert full_sr.standby_nj == pytest.approx(
+        sc.layers * E.SR_MA * sc.vdd * t_ns * 1e-3)
+    full_pd = E.stack_energy(sc, t_ns, n_act=0, n_rd=0, active_frac=0.0,
+                             pd_frac=1.0)
+    assert full_sr.standby_nj < full_pd.standby_nj
+    assert E.SR_MA < E.PD_MA
+    # through the metrics path: zeroing the measured residency raises it
+    m, _ = _run(_stack(policy=SR), spec=IDLE_SPEC, horizon=60_000)
+    assert float(m["sr_frac"]) > 0
+    eb = E.energy_from_metrics(_stack(policy=SR), m)
+    eb_no_sr = E.energy_from_metrics(_stack(policy=SR), m, sr_frac=0.0)
+    assert eb.standby_nj < eb_no_sr.standby_nj
+    assert eb.ops_nj == eb_no_sr.ops_nj
+
+
+def test_table1_self_refresh_row():
+    t1 = E.table1()
+    assert t1["Self-Refresh Current (mA)"] == [E.SR_MA] * 4
+    # the published rows are untouched
+    assert t1["Power-Down Current (mA)"] == [0.24] * 4
+
+
+# ----------------------------------------------------------------------------
+# sweep integration
+# ----------------------------------------------------------------------------
+
+def test_refresh_presets_axis_in_sweep():
+    """REFRESH_PRESETS as a sweep policy axis: per-cell results are
+    bit-identical to standalone simulate() at the bucket's chunk width,
+    and the default rows match a sweep without the axis."""
+    cells = tuple(
+        sweep.make_cell(n, dataclasses.replace(sc, t_refi_ns=1500.0),
+                        [IDLE_SPEC] * N_CORES, N_REQ, seed=7)
+        for n, sc in paper_configs(4).items() if "cascaded" in n)
+    pols = tuple(policies.REFRESH_PRESETS.values())
+    res = sweep.run_sweep(sweep.SweepSpec(cells, 60_000, policies=pols))
+    assert len(res.names) == len(cells) * len(pols)
+    for pol in pols:
+        for cell in cells:
+            name = f"{cell.name}|{pol.tag}"
+            stack = dataclasses.replace(cell.stack, policy=pol)
+            chunk = res.chunks[res.names.index(name)]
+            ref = simulate(stack, cell.traces, 60_000, chunk=chunk)
+            for k in ref:
+                assert np.array_equal(np.asarray(res[name][k]),
+                                      np.asarray(ref[k])), (name, k)
+
+
+def test_debt_drain_is_chunk_invariant():
+    """The loop's extra debt-drain cycles must not perturb any metric:
+    chunked and full-horizon runs agree on everything but chunks_run,
+    and both report zero debt at exit."""
+    sc = _stack(policy=POST)
+    traces = core_traces(5, [WRITE_SPEC] * N_CORES, N_REQ, sc.n_ranks,
+                         sc.banks_per_rank)
+    full = simulate(sc, traces, HORIZON, chunk=None)
+    assert int(full["ref_debt_end"]) == 0
+    for chunk in (100, 512, 2048):
+        m = simulate(sc, traces, HORIZON, chunk=chunk)
+        for k in full:
+            if k == "chunks_run":
+                continue
+            assert np.array_equal(np.asarray(m[k]),
+                                  np.asarray(full[k])), (chunk, k)

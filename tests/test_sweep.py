@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 from conftest import run_subprocess_jax
 
-from repro.core.smla import engine, sweep
+from repro.core.smla import engine, policies, sweep
 from repro.core.smla.analytic import (compare_configs, default_horizon,
                                       estimate_service_cycles, run_config)
 from repro.core.smla.config import paper_configs
@@ -421,6 +421,31 @@ def test_estimate_upper_bounds_default_grid():
             assert measured <= est, \
                 f"L{layers}/{cname}: measured {measured:.0f} > " \
                 f"estimate {est:.0f}"
+
+
+@pytest.mark.parametrize("pname", sorted(policies.POLICY_PRESETS))
+@pytest.mark.parametrize("q_size", [2, 4])
+def test_estimate_upper_bounds_policies_and_qsize(pname, q_size):
+    """The analytic estimate must stay a true upper bound across the
+    whole policy cross-product AND at queue depths smaller than the core
+    count's reachable occupancy: closed-page write precharges, self-
+    refresh wake latency (t_xsr), postponed refresh, and cross-core
+    serialisation through a tiny queue are all priced (q_size was once
+    ignored outright, and the bound was only pinned on the default
+    grid)."""
+    core = engine.CoreParams(q_size=q_size)
+    pol = policies.POLICY_PRESETS[pname]
+    for cname, sc in paper_configs(4).items():
+        sc = dataclasses.replace(sc, policy=pol)
+        traces = core_traces(0, SPECS, 60, sc.n_ranks, sc.banks_per_rank)
+        cell = sweep.SweepCell(cname, sc, traces)
+        est = estimate_service_cycles(sc, traces, core)
+        m = engine.simulate(sc, traces, default_horizon([cell], core), core)
+        assert bool(np.asarray(m["complete"]).all()), (pname, q_size, cname)
+        measured = float(m["makespan_ns"]) / sc.unit_ns
+        assert measured <= est, \
+            f"{pname}/q{q_size}/{cname}: measured {measured:.0f} > " \
+            f"estimate {est:.0f}"
 
 
 def test_scalars_rejects_per_core_metrics_clearly():
