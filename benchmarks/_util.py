@@ -11,6 +11,7 @@ parsing CSV text.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 from typing import Any
@@ -82,6 +83,96 @@ def perf_block(wall_s: float, res, horizon: int) -> dict:
         "early_exit_frac": round(1.0 - chunks.sum() / max(possible, 1), 4),
         "calibration": calibration,
     }
+
+
+@dataclasses.dataclass
+class FigureRecord:
+    """One figure's benchmark emission as a typed record.
+
+    Collapses the three result-plumbing paths every paper_fig module used
+    to hand-roll — `SweepResult.scalars()` coercion, the `perf_block`
+    summary, and the early-exit CI gate's field spelunking — onto one
+    object that also *carries its provenance*: `backend` and
+    `chunk_widths` ride along, so a BENCH JSON row is self-describing
+    across execution backends (scan vs pallas) instead of relying on the
+    section name.  `from_sweep` builds it from a live `SweepResult`;
+    `from_json` rehydrates an emitted section so
+    `benchmarks/assert_early_exit.py` gates through the same accessors
+    the emitters used.
+    """
+    figure: str
+    backend: str
+    horizon: int
+    n_cells: int
+    compiles: int
+    wall_s: float
+    perf: dict
+    chunk_widths: list
+    cell_names: list | None = None
+    scalars: dict | None = None
+    #: figure-specific payload (rows, geomeans, workload mixes, ...)
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_sweep(cls, figure: str, res, wall_s: float, *, horizon: int,
+                   compiles: int, extra: dict | None = None,
+                   include_scalars: bool = True) -> "FigureRecord":
+        """res: a `sweep.SweepResult` (its `backend` field is recorded)."""
+        perf = perf_block(wall_s, res, horizon)
+        scal = None
+        if include_scalars:
+            scal = {k: v for k, v in res.scalars().items() if k != "name"}
+        return cls(figure=figure, backend=res.backend, horizon=horizon,
+                   n_cells=len(res.names), compiles=compiles,
+                   wall_s=round(wall_s, 3), perf=perf,
+                   chunk_widths=perf["chunk_widths"],
+                   cell_names=list(res.names), scalars=scal,
+                   extra=dict(extra or {}))
+
+    @classmethod
+    def from_json(cls, figure: str, fig: dict | None) -> "FigureRecord":
+        """Rehydrate an emitted section (raises ValueError when the
+        section is missing its perf block — the gate's failure mode)."""
+        if not fig or "perf" not in fig:
+            raise ValueError(f"no {figure} perf section")
+        return cls(figure=figure, backend=fig.get("backend", "scan"),
+                   horizon=int(fig.get("horizon", 0)),
+                   n_cells=int(fig.get("n_cells", 0)),
+                   compiles=int(fig.get("compiles", 0)),
+                   wall_s=float(fig.get("wall_s", 0.0)), perf=fig["perf"],
+                   chunk_widths=fig.get("chunk_widths",
+                                        fig["perf"].get("chunk_widths", [])),
+                   cell_names=fig.get("cell_names"),
+                   scalars=fig.get("scalars"))
+
+    def payload(self) -> dict:
+        out = dict(self.extra)
+        out.update(backend=self.backend, horizon=self.horizon,
+                   n_cells=self.n_cells, compiles=self.compiles,
+                   wall_s=self.wall_s, perf=self.perf,
+                   chunk_widths=self.chunk_widths)
+        if self.cell_names is not None:
+            out["cell_names"] = self.cell_names
+        if self.scalars is not None:
+            out["scalars"] = self.scalars
+        return out
+
+    def emit(self, path: str | None = None,
+             section: str | None = None) -> str:
+        return emit_json(section or self.figure, self.payload(), path)
+
+    def early_exit_cells(self) -> list[tuple[str, int, int]]:
+        """Non-baseline cells that exited before the horizon:
+        (name, chunks_run, chunks_max) triples.  Raises ValueError when
+        the record lacks the needed fields (scalars/cell_names)."""
+        if self.scalars is None or self.cell_names is None:
+            raise ValueError(f"{self.figure}: record carries no "
+                             f"scalars/cell_names")
+        chunks = self.scalars["chunks_run"]
+        n_max = self.perf["cell_n_chunks_max"]
+        return [(n, int(c), int(m)) for n, c, m
+                in zip(self.cell_names, chunks, n_max)
+                if "/baseline/" not in n and int(c) < int(m)]
 
 
 def emit_json(section: str, payload: dict, path: str | None = None) -> str:

@@ -1,10 +1,13 @@
 """CI gate: the chunked sweep engine's early exit must actually engage.
 
-Reads the fig11, fig_policy, and fig_refresh sections of `BENCH_smla_sweep.json`
-(written by `benchmarks/run.py --smoke` just before this runs) and fails
-unless, in each, at least one non-baseline cell ran strictly fewer chunks
-than its bucket's horizon allows — i.e. the while-loop terminated on
-measured completion, not on the horizon.  Chunk widths are per-bucket
+Reads the fig11, fig_policy, and fig_refresh sections of
+`BENCH_smla_sweep.json` (written by `benchmarks/run.py --smoke` just
+before this runs), rehydrates each through `benchmarks._util.
+FigureRecord.from_json` — the SAME typed record the emitters write, so
+the gate and the benchmarks cannot drift apart on field spelling — and
+fails unless, in each, at least one non-baseline cell ran strictly fewer
+chunks than its bucket's horizon allows — i.e. the while-loop terminated
+on measured completion, not on the horizon.  Chunk widths are per-bucket
 (the auto ladder), so the bound is per cell (`perf.cell_n_chunks_max`).
 A regression that silently turns early exit back into fixed-horizon
 scanning (wrong exit predicate, chunks_run plumbing dropped, bucketing
@@ -18,28 +21,27 @@ import json
 import os
 import sys
 
-from benchmarks._util import BENCH_JSON_DEFAULT, BENCH_JSON_ENV
+from benchmarks._util import (BENCH_JSON_DEFAULT, BENCH_JSON_ENV,
+                              FigureRecord)
 
 GATED_FIGURES = ("fig11", "fig_policy", "fig_refresh")
 
 
 def check_figure(name: str, data: dict) -> str | None:
     """None on success, else the failure message."""
-    fig = data.get(name)
-    if not fig or "perf" not in fig or "scalars" not in fig:
-        return f"no {name} perf/scalars section"
-    names = fig["cell_names"]
-    chunks = fig["scalars"]["chunks_run"]
-    n_max = fig["perf"]["cell_n_chunks_max"]
-    early = [(n, int(c), int(m)) for n, c, m in zip(names, chunks, n_max)
-             if "/baseline/" not in n and int(c) < int(m)]
+    try:
+        rec = FigureRecord.from_json(name, data.get(name))
+        early = rec.early_exit_cells()
+    except ValueError as e:
+        return str(e)
     if not early:
         return (f"{name}: no non-baseline cell exited before the horizon "
                 f"— early exit is not engaging")
-    frac = fig["perf"]["early_exit_frac"]
-    print(f"assert_early_exit: {name} OK — {len(early)} non-baseline cells "
-          f"exited early (e.g. {early[0][0]} after {early[0][1]}/"
-          f"{early[0][2]} chunks); sweep-wide {frac:.0%} of chunks saved")
+    frac = rec.perf["early_exit_frac"]
+    print(f"assert_early_exit: {name} OK [{rec.backend}] — {len(early)} "
+          f"non-baseline cells exited early (e.g. {early[0][0]} after "
+          f"{early[0][1]}/{early[0][2]} chunks); sweep-wide {frac:.0%} "
+          f"of chunks saved")
     return None
 
 

@@ -7,13 +7,15 @@ batched sweep engine (at most one compile), instead of 155 separate
 compile+scan invocations."""
 import time
 
+import jax
 import numpy as np
 
-from benchmarks._util import emit_json, perf_block, scaled
+from benchmarks._util import FigureRecord, perf_block, scaled, smoke_mode
 from repro.core.smla import engine, sweep
 from repro.core.smla.analytic import default_horizon
 from repro.core.smla.config import paper_configs
 from repro.core.smla.energy import energy_from_metrics
+from repro.core.smla.engine import SimOptions
 from repro.core.smla.traces import WORKLOADS
 
 
@@ -27,7 +29,7 @@ def run(n_req: int = 600, horizon: int | None = None) -> list[str]:
         # tiny horizon so its numbers stay comparable across commits
         horizon = scaled(default_horizon(cells), 6_000)
 
-    spec = sweep.SweepSpec(tuple(cells), horizon)
+    spec = sweep.SweepSpec(tuple(cells), options=SimOptions(horizon=horizon))
     c0, t0 = engine.compile_count(), time.perf_counter()
     res = sweep.run_sweep(spec)
     wall = time.perf_counter() - t0
@@ -86,17 +88,50 @@ def run(n_req: int = 600, horizon: int | None = None) -> list[str]:
     rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
                 f"{wall:.1f}s wall, {perf['cells_per_s']:.1f} cells/s, "
                 f"early-exit saved {perf['early_exit_frac']:.0%} of chunks")
-    emit_json("fig11", {
-        "n_req": n_req, "horizon": horizon, "n_cells": len(cells),
-        "compiles": compiles, "wall_s": round(wall, 2), "perf": perf,
+    FigureRecord.from_sweep("fig11", res, wall, horizon=horizon,
+                            compiles=compiles, extra={
+        "n_req": n_req,
         "geomean": {k: gm(v) for k, v in per.items()},
         "total_n_wr": int(scal["n_wr"].sum()),
         "mean_pd_frac": float(scal["pd_frac"].mean()),
         "total_refresh_cycles": int(scal["refresh_cycles"].sum()),
         "rows": table,
-        "scalars": {k: v for k, v in scal.items() if k != "name"},
-        "cell_names": list(res.names),
-    })
+    }).emit()
+
+    # ---- second backend: the same grid through the fused Pallas kernel.
+    # On CPU (CI) Mosaic cannot lower, so the pass runs in interpreter
+    # mode — it validates the kernel end-to-end and records a comparable
+    # perf row, but cannot show the on-chip state-residency win, which
+    # needs a TPU (see EXPERIMENTS.md §Execution backends).  Full runs on
+    # CPU bound the interpreter pass to a sub-grid.
+    on_tpu = jax.default_backend() == "tpu"
+    pl_cells = cells if (smoke_mode() or on_tpu) else cells[:25]
+    pl_opts = SimOptions(horizon=horizon, backend="pallas",
+                         interpret=not on_tpu)
+    c0p, t0p = engine.compile_count(), time.perf_counter()
+    res_p = sweep.run_sweep(sweep.SweepSpec(tuple(pl_cells),
+                                            options=pl_opts))
+    wall_p = time.perf_counter() - t0p
+    compiles_p = engine.compile_count() - c0p
+    assert compiles_p <= len(set(res_p.chunks)), \
+        f"pallas pass took {compiles_p} compiles " \
+        f"(want <= {len(set(res_p.chunks))} chunk widths)"
+    # cross-backend fidelity on a probe cell (ints must match exactly)
+    probe = res_p.names[0]
+    assert np.array_equal(np.asarray(res[probe]["served"]),
+                          np.asarray(res_p[probe]["served"])), \
+        "pallas backend diverged from scan on served counts"
+    rec_p = FigureRecord.from_sweep(
+        "fig11.pallas", res_p, wall_p, horizon=horizon,
+        compiles=compiles_p, extra={
+            "n_req": n_req, "interpret": not on_tpu,
+            "cells_per_s_scan": perf["cells_per_s"],
+        })
+    rec_p.emit()
+    rows.append(f"# pallas backend [{'interpret' if not on_tpu else 'tpu'}]"
+                f": {len(pl_cells)} cells, {wall_p:.1f}s wall, "
+                f"{rec_p.perf['cells_per_s']:.1f} cells/s "
+                f"(scan: {perf['cells_per_s']:.1f})")
     return rows
 
 

@@ -12,11 +12,12 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit_json, perf_block, scaled
+from benchmarks._util import FigureRecord, perf_block, scaled
 from repro.core.smla import engine, sweep
 from repro.core.smla.analytic import default_horizon
 from repro.core.smla.config import paper_configs
 from repro.core.smla.energy import energy_from_metrics
+from repro.core.smla.engine import SimOptions
 from repro.core.smla.traces import WORKLOADS
 
 SMLA = ("dedicated_slr", "cascaded_slr", "dedicated_mlr", "cascaded_mlr")
@@ -44,7 +45,7 @@ def run(n_mixes: int = 6, n_req: int = 500, horizon: int | None = None,
     if horizon is None:
         horizon = scaled(default_horizon(cells), 6_000)
 
-    spec = sweep.SweepSpec(tuple(cells), horizon)
+    spec = sweep.SweepSpec(tuple(cells), options=SimOptions(horizon=horizon))
     c0, t0 = engine.compile_count(), time.perf_counter()
     res = sweep.run_sweep(spec)
     wall = time.perf_counter() - t0
@@ -57,7 +58,8 @@ def run(n_mixes: int = 6, n_req: int = 500, horizon: int | None = None,
 
     # acceptance cross-check: one cell must equal the per-config path exactly
     probe = cells[0]
-    ref = engine.simulate(probe.stack, probe.traces, horizon)
+    ref = engine.simulate(probe.stack, probe.traces,
+                          SimOptions(horizon=horizon))
     assert np.array_equal(np.asarray(ref["ipc"]), res[probe.name]["ipc"]), \
         "sweep metrics diverge from per-config simulate()"
 
@@ -93,13 +95,13 @@ def run(n_mixes: int = 6, n_req: int = 500, horizon: int | None = None,
     rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
                 f"{wall:.1f}s wall, early-exit saved "
                 f"{perf['early_exit_frac']:.0%} of chunks")
-    emit_json("fig12", {
-        "n_mixes": n_mixes, "n_req": n_req, "horizon": horizon,
-        "n_cells": len(cells), "compiles": compiles,
-        "wall_s": round(wall, 2), "perf": perf,
+    FigureRecord.from_sweep("fig12", res, wall, horizon=horizon,
+                            compiles=compiles, include_scalars=False,
+                            extra={
+        "n_mixes": n_mixes, "n_req": n_req,
         "mixes": {f"c{c}/m{m}": v for (c, m), v in mixes.items()},
         "rows": table,
-    })
+    }).emit()
     return rows
 
 

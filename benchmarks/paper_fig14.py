@@ -13,11 +13,12 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit_json, perf_block, scaled
+from benchmarks._util import FigureRecord, perf_block, scaled
 from repro.core.smla import engine, sweep
 from repro.core.smla.analytic import default_horizon
 from repro.core.smla.config import paper_configs
 from repro.core.smla.energy import energy_from_metrics
+from repro.core.smla.engine import SimOptions
 from repro.core.smla.traces import WorkloadSpec
 
 MPKIS = (0.4, 1.6, 6.4, 12.8, 25.6, 51.2)
@@ -34,7 +35,7 @@ def run(n_req: int = 500, horizon: int | None = None) -> list[str]:
     if horizon is None:
         horizon = scaled(default_horizon(cells), 6_000)
 
-    spec = sweep.SweepSpec(tuple(cells), horizon)
+    spec = sweep.SweepSpec(tuple(cells), options=SimOptions(horizon=horizon))
     c0, t0 = engine.compile_count(), time.perf_counter()
     res = sweep.run_sweep(spec)
     wall = time.perf_counter() - t0
@@ -73,11 +74,9 @@ def run(n_req: int = 500, horizon: int | None = None) -> list[str]:
     rows.append(f"# sweep: {len(cells)} cells, {compiles} compiles, "
                 f"{wall:.1f}s wall, early-exit saved "
                 f"{perf['early_exit_frac']:.0%} of chunks")
-    emit_json("fig14", {
-        "n_req": n_req, "horizon": horizon, "n_cells": len(cells),
-        "compiles": compiles, "wall_s": round(wall, 2), "perf": perf,
-        "rows": table,
-    })
+    FigureRecord.from_sweep("fig14", res, wall, horizon=horizon,
+                            compiles=compiles, include_scalars=False,
+                            extra={"n_req": n_req, "rows": table}).emit()
     return rows
 
 

@@ -19,11 +19,12 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit_json, perf_block, scaled
+from benchmarks._util import FigureRecord, perf_block, scaled
 from repro.core.smla import engine, policies, sweep
 from repro.core.smla.analytic import default_horizon
 from repro.core.smla.config import paper_configs
 from repro.core.smla.energy import energy_from_metrics
+from repro.core.smla.engine import SimOptions
 from repro.core.smla.traces import WORKLOADS
 
 #: one read-mostly low-MPKI and one write-heavy streaming workload — the
@@ -48,7 +49,8 @@ def run(n_req: int = 400, horizon: int | None = None,
         horizon = scaled(default_horizon(
             sweep.policy_cells(cells, tuple(presets.values()))), 6_000)
 
-    spec = sweep.SweepSpec(tuple(cells), horizon,
+    spec = sweep.SweepSpec(tuple(cells),
+                           options=SimOptions(horizon=horizon),
                            policies=tuple(presets.values()))
     c0, t0 = engine.compile_count(), time.perf_counter()
     res = sweep.run_sweep(spec)
@@ -108,17 +110,13 @@ def run(n_req: int = 400, horizon: int | None = None,
                 f"({len(cells)} x {len(presets)} policies), {compiles} "
                 f"compiles, {wall:.1f}s wall, early-exit saved "
                 f"{perf['early_exit_frac']:.0%} of chunks")
-    scal = res.scalars()
-    emit_json("fig_policy", {
-        "n_req": n_req, "horizon": horizon, "n_cells": len(res.names),
-        "n_policies": len(presets), "compiles": compiles,
+    FigureRecord.from_sweep("fig_policy", res, wall, horizon=horizon,
+                            compiles=compiles, extra={
+        "n_req": n_req, "n_policies": len(presets),
         "n_incomplete": n_incomplete,
-        "wall_s": round(wall, 2), "perf": perf,
         "policy_tags": {k: v.tag for k, v in presets.items()},
         "rows": table,
-        "scalars": {k: v for k, v in scal.items() if k != "name"},
-        "cell_names": list(res.names),
-    })
+    }).emit()
     return rows
 
 

@@ -29,11 +29,12 @@ import time
 
 import numpy as np
 
-from benchmarks._util import emit_json, perf_block, scaled
+from benchmarks._util import FigureRecord, perf_block, scaled
 from repro.core.smla import engine, policies, sweep
 from repro.core.smla.analytic import default_horizon
 from repro.core.smla.config import paper_configs
 from repro.core.smla.energy import energy_from_metrics
+from repro.core.smla.engine import SimOptions
 from repro.core.smla.traces import WorkloadSpec
 
 #: one deep-idle stream (long per-rank gaps — the self-refresh regime)
@@ -60,7 +61,7 @@ def run(n_req: int = 400, horizon: int | None = None,
         horizon = scaled(default_horizon(
             sweep.policy_cells(cells, tuple(presets.values()))), 24_000)
 
-    spec = sweep.SweepSpec(cells, horizon,
+    spec = sweep.SweepSpec(cells, options=SimOptions(horizon=horizon),
                            policies=tuple(presets.values()))
     c0, t0 = engine.compile_count(), time.perf_counter()
     res = sweep.run_sweep(spec)
@@ -130,17 +131,12 @@ def run(n_req: int = 400, horizon: int | None = None,
                 f"({len(cells)} x {len(presets)} presets), {compiles} "
                 f"compiles, {wall:.1f}s wall, early-exit saved "
                 f"{perf['early_exit_frac']:.0%} of chunks")
-    scal = res.scalars()
-    emit_json("fig_refresh", {
-        "n_req": n_req, "horizon": horizon, "n_cells": len(res.names),
-        "n_presets": len(presets), "compiles": compiles,
-        "t_refi_ns": T_REFI_NS,
-        "wall_s": round(wall, 2), "perf": perf,
+    FigureRecord.from_sweep("fig_refresh", res, wall, horizon=horizon,
+                            compiles=compiles, extra={
+        "n_req": n_req, "n_presets": len(presets), "t_refi_ns": T_REFI_NS,
         "preset_tags": {k: v.tag for k, v in presets.items()},
         "rows": table,
-        "scalars": {k: v for k, v in scal.items() if k != "name"},
-        "cell_names": list(res.names),
-    })
+    }).emit()
     return rows
 
 

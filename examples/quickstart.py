@@ -10,6 +10,7 @@ import jax
 
 from repro.configs import ParallelConfig, get_config, reduce_config
 from repro.core.smla.analytic import compare_configs, table2, weighted_speedup
+from repro.core.smla.engine import SimOptions
 from repro.core.smla.traces import WORKLOADS
 from repro.data.pipeline import SyntheticLM
 from repro.serve.engine import Engine, ServeConfig
@@ -22,7 +23,7 @@ for name, row in table2().items():
           f"avg transfer {row['avg_transfer_ns']:6.2f} ns")
 
 res = compare_configs([WORKLOADS[20], WORKLOADS[26]], n_req=400,
-                      horizon=40_000)
+                      options=SimOptions(horizon=40_000))
 ws = weighted_speedup(res["cascaded_slr"], res["baseline"])
 print(f"  cascaded-IO SLR speedup vs baseline (2-core mix): {ws:.2f}x\n")
 

@@ -10,7 +10,7 @@ import numpy as np
 from repro.core.smla.analytic import RunResult, run_config
 from repro.core.smla.config import paper_configs
 from repro.core.smla.traces import WorkloadSpec, lm_serving_trace
-from repro.core.smla.engine import simulate
+from repro.core.smla.engine import SimOptions, simulate
 
 
 def main():
@@ -19,7 +19,8 @@ def main():
     specs = [WorkloadSpec("lm.decode", 45.0, 0.75, write_frac=0.1)] * 4
     base = None
     for name, stack in paper_configs().items():
-        r = run_config(stack, specs, n_req=1200, horizon=80_000)
+        r = run_config(stack, specs, n_req=1200,
+                       options=SimOptions(horizon=80_000))
         if base is None:
             base = r
         speed = float(np.mean(r.ipc / np.maximum(base.ipc, 1e-9)))

@@ -15,7 +15,7 @@ from repro.core.smla import sweep as sweep_mod
 from repro.core.smla.config import (IOModel, RankOrg, RefreshGranularity,
                                     RowPolicy, SelfRefreshPolicy, StackConfig,
                                     paper_configs)
-from repro.core.smla.engine import CoreParams, simulate
+from repro.core.smla.engine import CoreParams, SimOptions, simulate
 from repro.core.smla.traces import WORKLOADS, WorkloadSpec, core_traces
 
 
@@ -184,33 +184,50 @@ def _to_run_result(stack: StackConfig, m: dict) -> RunResult:
         refresh_cycles=int(np.asarray(m.get("refresh_cycles", 0))))
 
 
+def _derive_options(options: SimOptions | None, horizon: int | None,
+                    cells, core: CoreParams) -> SimOptions:
+    """One SimOptions from the legacy (horizon) and new (options)
+    surfaces: options wins (passing both is an error); a bare/absent
+    horizon falls back to the analytic worst case (`default_horizon`)."""
+    if options is not None:
+        if horizon is not None:
+            raise ValueError("pass horizon inside SimOptions, not "
+                             "alongside it")
+        return options
+    if horizon is None:
+        horizon = default_horizon(cells, core)
+    return SimOptions(horizon=horizon)
+
+
 def run_config(stack: StackConfig, specs: Sequence[WorkloadSpec],
                n_req: int = 2000, horizon: int | None = None, seed: int = 0,
-               core: CoreParams = CoreParams()) -> RunResult:
-    """horizon=None derives the scan horizon analytically
-    (`default_horizon`); pass an explicit value to pin it."""
+               core: CoreParams = CoreParams(),
+               options: SimOptions | None = None) -> RunResult:
+    """`options` selects horizon/chunk/backend (`engine.SimOptions`);
+    when absent, horizon=None derives the scan horizon analytically
+    (`default_horizon`) and the defaults apply."""
     traces = core_traces(seed, list(specs), n_req, stack.n_ranks,
                          stack.banks_per_rank)
-    if horizon is None:
-        horizon = default_horizon(
-            [sweep_mod.SweepCell("", stack, traces)], core)
-    m = simulate(stack, traces, horizon, core)
+    opts = _derive_options(options, horizon,
+                           [sweep_mod.SweepCell("", stack, traces)], core)
+    m = simulate(stack, traces, opts, core)
     return _to_run_result(stack, m)
 
 
 def compare_configs(specs: Sequence[WorkloadSpec], layers: int = 4,
                     n_req: int = 2000, horizon: int | None = None,
-                    seed: int = 0) -> dict[str, RunResult]:
+                    seed: int = 0,
+                    options: SimOptions | None = None) -> dict[str, RunResult]:
     """All five paper configurations over one workload set — executed as a
     single vmapped batch (one compile, reused across calls with the same
-    shapes) instead of five sequential simulations.  horizon=None derives
-    the horizon from the analytic worst case (`default_horizon`)."""
+    shapes) instead of five sequential simulations.  `options` selects
+    horizon/chunk/backend; when absent, horizon=None derives the horizon
+    from the analytic worst case (`default_horizon`)."""
     cfgs = paper_configs(layers)
     cells = tuple(sweep_mod.make_cell(name, sc, specs, n_req, seed)
                   for name, sc in cfgs.items())
-    if horizon is None:
-        horizon = default_horizon(cells)
-    res = sweep_mod.run_sweep(sweep_mod.SweepSpec(cells, horizon))
+    opts = _derive_options(options, horizon, cells, CoreParams())
+    res = sweep_mod.run_sweep(sweep_mod.SweepSpec(cells, options=opts))
     out = {}
     for (name, sc), m in zip(cfgs.items(), res.cells):
         r = _to_run_result(sc, m)

@@ -72,11 +72,20 @@ while-loop batching masks finished cells, so each cell of a stacked batch
 freezes (and reports ``chunks_run``) at its *own* exit point; the batch
 runs until its slowest member finishes, which is why ``sweep.run_sweep``
 buckets cells by estimated makespan before stacking.
+
+Execution is selected by a single frozen ``SimOptions`` value (horizon,
+chunk, backend, interpret) threaded through every entry point and the
+compile cache.  ``backend="scan"`` is this module's reference pipeline;
+``backend="pallas"`` runs the *same* ``_sim_core`` inside a Pallas kernel
+tiled over blocks of the stacked cell axis (``core/smla/pallas_engine``),
+keeping the whole per-cell state dict on-chip across the chunked
+while-loop instead of round-tripping it through HBM every fast cycle.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -91,8 +100,96 @@ from repro.core.smla.policies import BIG
 #: 1024 measured best on the fig11 grid: fine enough exit granularity
 #: without noticeable while-loop dispatch overhead.  ``sweep.run_sweep``
 #: additionally derives finer per-bucket widths for fast buckets
-#: (``SweepSpec.chunk="auto"``), clamped to this value.
+#: (``SimOptions.chunk="auto"``), clamped to this value.
 DEFAULT_CHUNK = 1024
+
+#: ``SimOptions.chunk`` sentinel: let the executor pick the width —
+#: ``sweep.run_sweep`` derives one per makespan bucket (its ladder),
+#: ``simulate``/``batched_simulate`` fall back to ``DEFAULT_CHUNK``.
+AUTO = "auto"
+
+#: execution backends: ``"scan"`` is the reference ``lax.scan`` pipeline
+#: (state round-trips HBM every chunk); ``"pallas"`` fuses the whole
+#: chunked while-loop into a Pallas kernel over cell blocks
+#: (``core/smla/pallas_engine.py``) so per-cell state stays on-chip.
+BACKENDS = ("scan", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimOptions:
+    """The execution surface of the cycle engine, in one hashable value.
+
+    Replaces the keyword-only kwargs that accreted across ``simulate`` /
+    ``batched_simulate`` / ``run_sweep`` (horizon positional int,
+    ``chunk=``, per-call backend flags): one frozen dataclass is threaded
+    through every entry point AND keys the compile cache, so two runs
+    with equal options provably share one executable per shape group.
+
+    horizon    fast-cycle scan horizon (safety net; the chunked engine
+               exits at the measured makespan).
+    chunk      early-exit scan-chunk width: int pins a width, ``None``
+               disables chunking (one full-horizon chunk), ``AUTO``
+               (default) lets the executor pick — per-bucket ladder in
+               ``sweep.run_sweep``, ``DEFAULT_CHUNK`` elsewhere.
+    backend    ``"scan"`` (reference) or ``"pallas"`` (fused kernel; bit-
+               compatible, see ``pallas_engine`` for the documented float
+               tolerance).
+    interpret  run the Pallas kernel in interpreter mode — required on
+               CPU (CI) where Mosaic cannot lower; ignored by ``"scan"``.
+    """
+    horizon: int
+    chunk: int | None | str = AUTO
+    backend: str = "scan"
+    interpret: bool = False
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend={self.backend!r} not in {BACKENDS}")
+        if not (self.chunk is None or self.chunk == AUTO
+                or isinstance(self.chunk, (int, np.integer))):
+            raise ValueError(f"chunk={self.chunk!r}: want int, None or "
+                             f"{AUTO!r}")
+        if int(self.horizon) < 1:
+            raise ValueError(f"horizon={self.horizon!r}: want >= 1")
+
+    def with_chunk(self, chunk: int | None) -> "SimOptions":
+        return dataclasses.replace(self, chunk=chunk)
+
+    def resolved(self) -> "SimOptions":
+        """AUTO chunk -> DEFAULT_CHUNK (single-batch executors; the sweep
+        resolves AUTO per makespan bucket before it gets here)."""
+        if self.chunk == AUTO:
+            return dataclasses.replace(self, chunk=DEFAULT_CHUNK)
+        return self
+
+
+_UNSET = object()
+
+
+def _coerce_options(options, chunk, fn_name: str) -> SimOptions:
+    """Accept the new surface (a SimOptions) or the deprecated one
+    (positional int horizon + ``chunk=`` kwarg) with a DeprecationWarning;
+    one release of overlap, then the int path goes away."""
+    if isinstance(options, SimOptions):
+        if chunk is not _UNSET:
+            raise TypeError(
+                f"{fn_name}: pass chunk inside SimOptions, not as a kwarg")
+        return options
+    warnings.warn(
+        f"{fn_name}(..., horizon: int, chunk=...) is deprecated; pass "
+        f"SimOptions(horizon=..., chunk=...) instead",
+        DeprecationWarning, stacklevel=3)
+    return SimOptions(horizon=int(options),
+                      chunk=DEFAULT_CHUNK if chunk is _UNSET else chunk)
+
+
+def _check_backend(options: SimOptions) -> None:
+    if (options.backend == "pallas" and not options.interpret
+            and jax.default_backend() != "tpu"):
+        raise ValueError(
+            "backend='pallas' compiles through Mosaic, which needs a TPU; "
+            "on CPU/GPU pass SimOptions(..., interpret=True) to run the "
+            "kernel in interpreter mode (same semantics, no fusion)")
 
 
 def effective_chunk(horizon: int, chunk: int | None) -> int:
@@ -739,45 +836,70 @@ def _with_timing_defaults(params: dict) -> dict:
 
 
 @functools.lru_cache(maxsize=None)
-def _compiled(horizon: int, core: CoreParams, banks: int,
-              shapes_key: tuple, batched: bool, chunk: int | None):
+def _compiled(options: SimOptions, core: CoreParams, banks: int,
+              shapes_key: tuple, batched: bool):
     """One jitted executable per static signature.
 
-    shapes_key pins (n_cells, n_cores, n_req_max, r_max) so each cache miss
+    shapes_key pins (n_cells, n_cores, n_req_max, r_max); `options` (with
+    the chunk already resolved — never AUTO) carries the remaining static
+    quantities (horizon, chunk, backend, interpret), so each cache miss
     corresponds to exactly one XLA compilation of the returned function.
     """
+    assert options.chunk != AUTO, "resolve AUTO before the compile cache"
     _COMPILE_COUNT[0] += 1
-    fn = functools.partial(_sim_core, horizon=horizon, core=core,
-                           banks=banks, chunk=chunk)
+    if options.backend == "pallas":
+        from repro.core.smla import pallas_engine   # lazy: imports us back
+        raw = functools.partial(
+            pallas_engine.sim_cell_blocks, horizon=options.horizon,
+            core=core, banks=banks, chunk=options.chunk,
+            interpret=options.interpret)
+        if batched:
+            return jax.jit(raw)
+
+        def single(params, traces):
+            lift = functools.partial(jax.tree_util.tree_map,
+                                     lambda x: jnp.asarray(x)[None])
+            out = raw(lift(params), lift(traces))
+            return jax.tree_util.tree_map(lambda x: x[0], out)
+        return jax.jit(single)
+    fn = functools.partial(_sim_core, horizon=options.horizon, core=core,
+                           banks=banks, chunk=options.chunk)
     if batched:
         fn = jax.vmap(fn)
     return jax.jit(fn)
 
 
-def batched_simulate(params: dict, traces: dict, horizon: int,
-                     core: CoreParams, banks: int, *,
-                     chunk: int | None = DEFAULT_CHUNK) -> dict:
+def batched_simulate(params: dict, traces: dict,
+                     options: SimOptions | int, core: CoreParams,
+                     banks: int, *, chunk=_UNSET) -> dict:
     """Run a stacked batch of cells: every leaf has a leading cell axis.
 
-    Inputs may carry a per-device sharding over the cell axis (see
-    ``sweep.run_sweep``); the jitted program then partitions along it."""
+    `options` is the execution surface (`SimOptions`); passing an int
+    horizon (+ the legacy ``chunk=`` kwarg) still works one release, with
+    a DeprecationWarning.  Inputs may carry a per-device sharding over
+    the cell axis (see ``sweep.run_sweep``); the jitted program then
+    partitions along it."""
+    options = _coerce_options(options, chunk, "batched_simulate").resolved()
+    _check_backend(options)
     n_cells, n_cores, n_req_max = traces["inst"].shape
     r_max = params["dur"].shape[1]
-    fn = _compiled(horizon, core, banks,
-                   (n_cells, n_cores, n_req_max, r_max), True, chunk)
+    fn = _compiled(options, core, banks,
+                   (n_cells, n_cores, n_req_max, r_max), True)
     return fn(_with_timing_defaults(params), _with_wr(traces))
 
 
-def simulate(stack: StackConfig, traces: dict, horizon: int,
-             core: CoreParams = CoreParams(), *,
-             chunk: int | None = DEFAULT_CHUNK) -> dict:
+def simulate(stack: StackConfig, traces: dict, options: SimOptions | int,
+             core: CoreParams = CoreParams(), *, chunk=_UNSET) -> dict:
     """traces: dict of (C, n_req) arrays (inst f32; rank/bank/row i32;
-    optional wr i32, defaulting to all-reads).
+    optional wr i32, defaulting to all-reads).  `options` as in
+    `batched_simulate` (int horizon is the deprecated legacy surface).
     Returns metrics dict of scalars / per-core arrays (all jnp)."""
+    options = _coerce_options(options, chunk, "simulate").resolved()
+    _check_backend(options)
     n_cores, n_req = traces["inst"].shape
     params = stack.to_params()
     params["n_req"] = np.int32(n_req)
-    fn = _compiled(horizon, core, stack.banks_per_rank,
-                   (1, n_cores, n_req, stack.n_ranks), False, chunk)
+    fn = _compiled(options, core, stack.banks_per_rank,
+                   (1, n_cores, n_req, stack.n_ranks), False)
     return fn({k: jnp.asarray(v) for k, v in params.items()},
               _with_wr({k: jnp.asarray(v) for k, v in traces.items()}))

@@ -36,14 +36,19 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.smla.config import (ControllerPolicy, RefreshGranularity,
                                     RefreshPostpone, RowPolicy, SchedPolicy,
                                     SelfRefreshPolicy, WriteDrainPolicy)
 
 #: score/sentinel magnitude shared with the engine (engine.BIG aliases
-#: this) — the int32 score encoding above depends on it staying 2**30
-BIG = jnp.int32(2**30)
+#: this) — the int32 score encoding above depends on it staying 2**30.
+#: A numpy (not jnp) scalar on purpose: jax inlines it as a jaxpr
+#: literal, so kernel bodies using it (the Pallas backend traces the
+#: stages inside `pl.pallas_call`, which forbids captured device-array
+#: constants) stay closure-free; arithmetic/promotion is identical.
+BIG = np.int32(2**30)
 
 #: params keys carrying the traced policy selectors, in to_params order
 SELECTOR_KEYS = ("sched_sel", "row_sel", "ref_sel", "drain_sel",

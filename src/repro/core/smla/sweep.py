@@ -53,7 +53,7 @@ import numpy as np
 
 from repro.core.smla import engine
 from repro.core.smla.config import ControllerPolicy, StackConfig, paper_configs
-from repro.core.smla.engine import CoreParams
+from repro.core.smla.engine import CoreParams, SimOptions
 from repro.core.smla.traces import (WorkloadSpec, core_traces, pad_traces,
                                     stack_traces)
 
@@ -79,9 +79,10 @@ SCALAR_METRICS = ("bandwidth_gbps", "n_act", "n_row_conflicts", "bus_util",
 CHUNK_LADDER = (128, 256, 512, 1024)
 AUTO_CHUNK_TARGET = 32
 
-#: SweepSpec.chunk sentinel: derive per-bucket widths from the analytic
-#: estimate instead of one global constant.
-AUTO = "auto"
+#: chunk sentinel: derive per-bucket widths from the analytic estimate
+#: instead of one global constant (re-exported from `engine` — the same
+#: value is valid in `SimOptions.chunk`).
+AUTO = engine.AUTO
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,12 +95,16 @@ class SweepCell:
 
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
-    """A batch of grid cells sharing one horizon and core model.
+    """A batch of grid cells sharing one execution surface and core model.
 
-    `chunk` is the engine's early-exit scan-chunk width: an int pins one
-    width for every bucket, None disables early exit (one full-horizon
-    chunk), and the default ``"auto"`` derives a per-bucket width from
-    the bucket's analytic makespan estimate (`CHUNK_LADDER`).
+    The execution surface — horizon, early-exit chunk policy, backend,
+    interpret mode — is one `engine.SimOptions` value (`options`).  The
+    legacy fields `horizon`/`chunk` remain as a one-release shim:
+    ``SweepSpec(cells, horizon, chunk=...)`` builds the equivalent
+    options; passing both `horizon` and `options` is an error.  With
+    ``chunk=AUTO`` (the default) each makespan bucket derives its own
+    width from the analytic estimate (`CHUNK_LADDER`); an int pins one
+    width, None disables early exit (one full-horizon chunk).
     `makespan_batching` orders compatible cells by their analytic
     service-time estimate and buckets them so fast cells are not
     barriered behind slow ones; `max_buckets` caps how many buckets one
@@ -108,12 +113,25 @@ class SweepSpec:
     ``|tag`` suffix); the selectors are traced, so the axis multiplies
     the grid without multiplying compiles."""
     cells: tuple[SweepCell, ...]
-    horizon: int
+    horizon: int | None = None
     core: CoreParams = CoreParams()
     chunk: int | None | str = AUTO
     makespan_batching: bool = True
     max_buckets: int = 8
     policies: tuple[ControllerPolicy, ...] | None = None
+    options: SimOptions | None = None
+
+    def resolved_options(self) -> SimOptions:
+        """The one SimOptions this sweep runs under."""
+        if self.options is not None:
+            if self.horizon is not None:
+                raise ValueError("pass horizon inside SimOptions, not "
+                                 "alongside it")
+            return self.options
+        if self.horizon is None:
+            raise ValueError("SweepSpec needs options=SimOptions(...) "
+                             "(or the legacy positional horizon)")
+        return SimOptions(horizon=self.horizon, chunk=self.chunk)
 
 
 @dataclasses.dataclass
@@ -126,6 +144,9 @@ class SweepResult:
     #: "measured_cycles", "est_max", "measured_max"} — analytic estimate
     #: vs measured makespan, emitted into the figure perf blocks
     buckets: list[dict] = dataclasses.field(default_factory=list)
+    #: execution backend that produced these metrics ("scan" | "pallas"),
+    #: carried so benchmark records are self-describing
+    backend: str = "scan"
 
     def __getitem__(self, name: str) -> dict:
         return self.cells[self.names.index(name)]
@@ -203,7 +224,7 @@ def _auto_chunk(est_max: float) -> int:
     return min(CHUNK_LADDER[-1], engine.DEFAULT_CHUNK)
 
 
-def _plan_buckets(spec: SweepSpec, group: list[SweepCell],
+def _plan_buckets(spec: SweepSpec, opts: SimOptions, group: list[SweepCell],
                   n_dev: int) -> tuple[list[list[int]], list[float]]:
     """Split one static-shape group into equal-size makespan buckets.
 
@@ -218,7 +239,7 @@ def _plan_buckets(spec: SweepSpec, group: list[SweepCell],
     n = len(group)
     est = [analytic.estimate_service_cycles(c.stack, c.traces, spec.core)
            for c in group]
-    single = (not spec.makespan_batching or spec.chunk is None or n <= 1)
+    single = (not spec.makespan_batching or opts.chunk is None or n <= 1)
     k = 1 if single else min(spec.max_buckets, n)
     size = -(-n // k)
     size = -(-size // n_dev) * n_dev            # device multiple
@@ -235,11 +256,12 @@ def _plan_buckets(spec: SweepSpec, group: list[SweepCell],
     return buckets, est
 
 
-def _bucket_chunk(spec: SweepSpec, bucket_est: Sequence[float]) -> int | None:
+def _bucket_chunk(opts: SimOptions,
+                  bucket_est: Sequence[float]) -> int | None:
     """The scan-chunk width one bucket runs with."""
-    if spec.chunk == AUTO:
+    if opts.chunk == AUTO:
         return _auto_chunk(max(bucket_est))
-    return spec.chunk
+    return opts.chunk
 
 
 def _cell_sharding(n_dev: int):
@@ -261,6 +283,7 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
     multiple devices are visible.  Metrics are bit-identical to per-cell
     `engine.simulate` with the same effective chunk width; chunk width
     itself only moves the `chunks_run` diagnostic."""
+    opts = spec.resolved_options()
     cells = (list(spec.cells) if spec.policies is None
              else policy_cells(spec.cells, spec.policies))
     order: dict[tuple, list[int]] = {}
@@ -276,10 +299,10 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
         group = [cells[i] for i in idxs]
         r_max = max(c.stack.n_ranks for c in group)
         n_req_max = max(c.traces["inst"].shape[1] for c in group)
-        buckets, est = _plan_buckets(spec, group, n_dev)
+        buckets, est = _plan_buckets(spec, opts, group, n_dev)
         sharding = _cell_sharding(n_dev) if n_dev > 1 else None
         for bucket in buckets:
-            chunk_b = _bucket_chunk(spec, [est[j] for j in bucket])
+            chunk_b = _bucket_chunk(opts, [est[j] for j in bucket])
             batch = [group[j] for j in bucket]
             plist = []
             for c in batch:
@@ -292,13 +315,13 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
             if sharding is not None:
                 params = jax.device_put(params, sharding)
                 traces = jax.device_put(traces, sharding)
-            out = engine.batched_simulate(params, traces, spec.horizon,
-                                          spec.core, banks,
-                                          chunk=chunk_b)
+            out = engine.batched_simulate(params, traces,
+                                          opts.with_chunk(chunk_b),
+                                          spec.core, banks)
             # duplicate pad entries land on the same original index with
             # bit-identical values — assigning them again is harmless.
             meta = {"cells": [], "chunk": engine.effective_chunk(
-                spec.horizon, chunk_b), "est_cycles": [],
+                opts.horizon, chunk_b), "est_cycles": [],
                 "measured_cycles": []}
             seen: set[int] = set()
             for j_pos, j in enumerate(bucket):
@@ -317,4 +340,5 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
             meta["measured_max"] = max(meta["measured_cycles"])
             bucket_meta.append(meta)
     return SweepResult(names=[c.name for c in cells],
-                       cells=results, chunks=chunks, buckets=bucket_meta)
+                       cells=results, chunks=chunks, buckets=bucket_meta,
+                       backend=opts.backend)

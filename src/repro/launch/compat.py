@@ -103,17 +103,25 @@ _real_shard_map = getattr(jax, "shard_map", None)
 
 
 # Partial-manual shard_map (manual 'pod', auto 'data'/'model') needs a newer
-# XLA: on 0.4.x the partitioner hits IsManualSubgroup checks in the model
-# body and lowers lax.axis_index to an unsupported PartitionId instruction.
+# XLA: on 0.4.x `lax.axis_index` in the partial-manual body lowers to a
+# PartitionId instruction SPMD partitioning rejects as UNIMPLEMENTED.
+# Blocked on jax/jaxlib 0.4.x (container pins 0.4.37; re-confirmed
+# 2026-08); fixed in jax >= 0.5.  Remove when the pin moves —
+# tests/test_compat_fallbacks.py re-runs the breaking op and fails the
+# moment this guard goes stale in either direction.
 SUPPORTS_PARTIAL_MANUAL = _HAS_NEW_API
 
 
 def suppress_sharding_constraints(mesh) -> bool:
-    """True inside a partial-manual shard_map region on 0.4.x.
+    """True inside a manual shard_map region on 0.4.x.
 
-    There, with_sharding_constraint over the remaining auto axes trips an
-    XLA SPMD check (``sharding.IsManualSubgroup()``; fixed in newer
-    releases), so constraints must be skipped and left to GSPMD inference.
+    There, a with_sharding_constraint naming any mesh axis raises
+    ``Axis ... is also found in manual_axes`` at trace time, so
+    constraints must be skipped and left to GSPMD inference.  Blocked on
+    jax/jaxlib 0.4.x (container pins 0.4.37; re-confirmed 2026-08);
+    fixed in jax >= 0.5 via per-axis types.  Remove when the pin moves —
+    tests/test_compat_fallbacks.py probes the breaking op against this
+    guard.
     """
     if _HAS_NEW_API:
         return False
