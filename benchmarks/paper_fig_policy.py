@@ -15,6 +15,7 @@ selectors are traced integers, so the policy axis multiplies cells
 without multiplying compiles (asserted below via compile_count deltas —
 at most one compile per auto-chunk ladder width).
 """
+import dataclasses
 import time
 
 import numpy as np
@@ -78,8 +79,11 @@ def run(n_req: int = 400, horizon: int | None = None,
                 ws.append(float(np.mean(
                     m["ipc"] / np.maximum(base["ipc"], 1e-9))))
                 base_e = energy_from_metrics(cfgs[cname], base).total_nj
+                # price under the swept policy: the clock-gating axis
+                # bills gated layers at their reduced standby frequency
+                cfg_p = dataclasses.replace(cfgs[cname], policy=pol)
                 erel.append(
-                    energy_from_metrics(cfgs[cname], m).total_nj / base_e)
+                    energy_from_metrics(cfg_p, m).total_nj / base_e)
                 served = max(int(np.asarray(m["served"]).sum()), 1)
                 apr.append(int(m["n_act"]) / served)
                 mk_cyc = max(float(m["makespan_ns"])

@@ -1,0 +1,184 @@
+"""Serve↔sim loop: LM-serving traffic classes x rank organisation x
+controller policy, driven by streams captured from the serving engine.
+
+Beyond the paper's Pin traces: the serving engine (`repro.serve.engine`)
+generates real prefill/decode steps on a reduced model; the bridge
+(`repro.serve.bridge`) captures the per-step memory-request stream
+(weight sweeps, KV reads, exact per-token KV-append writes, keyed by
+lane/tenant), reduces it to a measured per-token profile, and scales it
+out into multi-tenant traces under three parameterised traffic classes
+(`traces.TrafficMix`): a decode-dominated steady tail, an ingest-heavy
+prefill front, and a bursty Gamma-arrival multi-tenant mix.  Each class
+then sweeps both SMLA rank organisations (cascaded MLR vs SLR) across
+the full controller-policy cross-product — including the DVFS-style
+per-layer clock-gating axis (`LayerClockPolicy`) — answering the
+ROADMAP's question: which controller + placement per traffic class.
+
+The whole (traffic x organisation x policy) grid is ONE shape group —
+policy selectors (clock gating included) are traced integers, so the
+policy axis multiplies cells without multiplying compiles (asserted via
+compile_count deltas, at most one compile per auto-chunk width).
+"""
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks._util import FigureRecord, perf_block, scaled
+from repro.core.smla import engine, policies, sweep
+from repro.core.smla.analytic import default_horizon
+from repro.core.smla.config import paper_configs
+from repro.core.smla.energy import energy_from_metrics
+from repro.core.smla.engine import SimOptions
+from repro.core.smla.traces import TrafficMix
+
+#: the three serving traffic classes (>= 3 per the roadmap/CI gate); all
+#: share n_tenants so the whole figure stays one static shape group
+TRAFFIC_CLASSES = (
+    TrafficMix("decode_steady", prefill_frac=0.05, arrival="poisson",
+               n_tenants=4, intensity=1.0),
+    TrafficMix("prefill_heavy", prefill_frac=0.5, arrival="poisson",
+               n_tenants=4, intensity=1.0),
+    TrafficMix("bursty_tenants", prefill_frac=0.2, arrival="gamma",
+               cv2=8.0, n_tenants=4, intensity=1.0),
+)
+
+#: the two SMLA rank organisations the placement policies map onto
+ORGS = ("cascaded_mlr", "cascaded_slr")
+
+
+def _capture_profile(max_new_tokens: int):
+    """One real captured run on a reduced serving engine -> profile."""
+    import jax
+
+    from repro import models
+    from repro.configs import get_config, reduce_config
+    from repro.configs.base import ParallelConfig
+    from repro.serve import bridge
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = reduce_config(get_config("tinyllama-1.1b"))
+    model = models.get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    pcfg = ParallelConfig(attn_impl="chunked", moe_impl="dense",
+                          remat="none")
+    eng = Engine(cfg, pcfg, ServeConfig(max_seq=64, eos_id=3), params)
+    batch = models.make_batch(jax.random.PRNGKey(1), cfg, 4, 8,
+                              kind="serve")
+    out, cap = bridge.capture_generate(eng, batch, max_new_tokens)
+    prof = bridge.StreamProfile.from_capture(cap)
+    stats = {
+        "n_lanes": cap.n_lanes,
+        "prompt_tokens": [int(x) for x in cap.prompt_tokens],
+        "live_decode_tokens": [int(x) for x in cap.live_decode_tokens],
+        "generated_shape": list(np.asarray(out).shape),
+        "profile": dataclasses.asdict(prof),
+    }
+    return prof, stats
+
+
+def run(n_req: int = 600, horizon: int | None = None,
+        seed: int = 0) -> list[str]:
+    from repro.serve import bridge
+
+    n_req = scaled(n_req, 120)
+    prof, cap_stats = _capture_profile(scaled(16, 8))
+    cfgs = {name: paper_configs(4)[name] for name in ORGS}
+    r_max = max(sc.n_ranks for sc in cfgs.values())
+    banks = next(iter(cfgs.values())).banks_per_rank
+
+    # one trace per traffic class, shared by both organisations (the
+    # workload does not change with placement; the engine takes trace
+    # ranks mod the config's rank count)
+    cells = []
+    for mix in TRAFFIC_CLASSES:
+        traces = bridge.mix_trace(seed, mix, prof, n_req, r_max, banks)
+        for org, sc in cfgs.items():
+            cells.append(sweep.SweepCell(f"{mix.name}/{org}", sc, traces))
+
+    presets = policies.POLICY_PRESETS
+    if horizon is None:
+        # derived over the POLICY-EXPANDED grid (clock-gated cells get
+        # their stretched-transfer inflation); generosity is nearly free
+        # — the chunked engine exits at the measured makespan
+        horizon = default_horizon(
+            sweep.policy_cells(cells, tuple(presets.values())))
+
+    spec = sweep.SweepSpec(tuple(cells),
+                           options=SimOptions(horizon=horizon),
+                           policies=tuple(presets.values()))
+    c0, t0 = engine.compile_count(), time.perf_counter()
+    res = sweep.run_sweep(spec)
+    wall = time.perf_counter() - t0
+    compiles = engine.compile_count() - c0
+    bound = max(len(set(res.chunks)), 1)
+    assert compiles <= bound, \
+        f"policy/clock axes multiplied compiles: {compiles} (want <= " \
+        f"{bound} chunk widths — selectors must stay traced)"
+
+    rows = ["traffic,config,policy,bandwidth_gbps,ws_vs_default,"
+            "energy_vs_default,write_frac,complete_frac"]
+    table = []
+    for mix in TRAFFIC_CLASSES:
+        for org, sc in cfgs.items():
+            base = res[f"{mix.name}/{org}|default"]
+            base_e = energy_from_metrics(sc, base).total_nj
+            for pname, pol in presets.items():
+                m = res[f"{mix.name}/{org}|{pol.tag}"]
+                ws = float(np.mean(m["ipc"]
+                                   / np.maximum(base["ipc"], 1e-9)))
+                # price energy under the swept policy (clock gating
+                # changes the standby frequency the layer is billed at)
+                e = energy_from_metrics(
+                    dataclasses.replace(sc, policy=pol), m).total_nj
+                served = max(int(np.asarray(m["served"]).sum()), 1)
+                vals = dict(
+                    traffic=mix.name, config=org, policy=pname,
+                    bandwidth_gbps=float(m["bandwidth_gbps"]),
+                    ws=ws, energy=float(e / base_e),
+                    write_frac=float(int(m["n_wr"]) / served),
+                    complete_frac=float(
+                        np.asarray(m["complete"]).mean()))
+                table.append(vals)
+                rows.append(
+                    f"{mix.name},{org},{pname},"
+                    f"{vals['bandwidth_gbps']:.2f},{vals['ws']:.3f},"
+                    f"{vals['energy']:.3f},{vals['write_frac']:.3f},"
+                    f"{vals['complete_frac']:.2f}")
+    rows.append("# traces captured from the serving engine "
+                "(repro.serve.bridge) and scaled out per traffic class; "
+                "ws/energy are relative to the same traffic x config "
+                "under the paper's default controller")
+    perf = perf_block(wall, res, horizon)
+    rows.append(f"# sweep: {len(res.names)} cells ({len(cells)} x "
+                f"{len(presets)} policies), {compiles} compiles, "
+                f"{wall:.1f}s wall, early-exit saved "
+                f"{perf['early_exit_frac']:.0%} of chunks")
+    FigureRecord.from_sweep("fig_serve", res, wall, horizon=horizon,
+                            compiles=compiles, extra={
+        "n_req": n_req, "n_policies": len(presets),
+        "traffic_classes": [dataclasses.asdict(m)
+                            for m in TRAFFIC_CLASSES],
+        "capture": cap_stats,
+        "policy_tags": {k: v.tag for k, v in presets.items()},
+        "rows": table,
+    }).emit()
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (same as SMLA_SMOKE=1)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["SMLA_SMOKE"] = "1"
+    print("\n".join(run()))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

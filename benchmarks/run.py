@@ -23,6 +23,7 @@ BENCHES = [
     "benchmarks.paper_fig14",         # MPKI vs energy
     "benchmarks.paper_fig_policy",    # controller-policy sensitivity
     "benchmarks.paper_fig_refresh",   # refresh-management / deep power states
+    "benchmarks.paper_fig_serve",     # serve<->sim loop: captured LM traffic
     "benchmarks.collective_schedules",# cascaded vs dedicated cross-pod sync
     "benchmarks.smla_pipe_bench",     # SMLA pipeline kernel
     "benchmarks.serve_policies",      # MLR vs SLR serving placement

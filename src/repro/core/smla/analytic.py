@@ -34,7 +34,11 @@ def _timing_view(stack: StackConfig) -> tuple[float, float, float, float]:
     correspondingly lighter — keeping the estimate tight enough that
     per-bank cells land in faster buckets."""
     R = stack.n_ranks
-    dur = np.array([stack.transfer_cycles(r) for r in range(R)], float)
+    # clock_dividers() is all-ones unless the policy gates per-layer
+    # clocks (then upper dedicated-SLR ranks transfer slower), so the
+    # default calibration is untouched
+    dur = np.array([stack.transfer_cycles(r) for r in range(R)], float) \
+        * stack.clock_dividers()
     lat = float(stack.t_rp + stack.t_rcd + stack.t_cl)
     t_refi, t_rfc = float(stack.t_refi), float(stack.t_rfc)
     if stack.policy.refresh_gran == RefreshGranularity.PER_BANK:

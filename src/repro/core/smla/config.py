@@ -73,6 +73,18 @@ class RefreshPostpone(enum.IntEnum):
                       # shadow windows (drain-aware refresh scheduling)
 
 
+class LayerClockPolicy(enum.IntEnum):
+    UNIFORM = 0       # every layer IO link at its IO-model clock (the paper)
+    GATED = 1         # DVFS-style per-layer clock gating tied to placement:
+                      # a Dedicated-IO SLR layer's private link drops to the
+                      # Cascaded-IO tier clock for that layer (divide-by-two
+                      # counters, §4.2.1) — standby energy falls to the
+                      # cascaded level, upper-layer transfers stretch by the
+                      # divider.  A no-op (divider 1) wherever layers do not
+                      # own private links (BASELINE, MLR) or already run the
+                      # tier clocks (CASCADED).
+
+
 @dataclasses.dataclass(frozen=True)
 class ControllerPolicy:
     """One point of the controller-policy cross-product.
@@ -86,6 +98,7 @@ class ControllerPolicy:
     write_drain: WriteDrainPolicy = WriteDrainPolicy.INLINE
     self_refresh: SelfRefreshPolicy = SelfRefreshPolicy.OFF
     ref_postpone: RefreshPostpone = RefreshPostpone.STRICT
+    layer_clock: LayerClockPolicy = LayerClockPolicy.UNIFORM
 
     @property
     def is_default(self) -> bool:
@@ -113,6 +126,8 @@ class ControllerPolicy:
             parts.append("sr")
         if self.ref_postpone == RefreshPostpone.POSTPONE_8X:
             parts.append("post8")
+        if self.layer_clock == LayerClockPolicy.GATED:
+            parts.append("clkgate")
         return "-".join(parts)
 
 
@@ -231,6 +246,34 @@ class StackConfig:
             f = max(f / 2.0, self.base_freq_mhz)
         return max(f, self.base_freq_mhz)
 
+    def clock_dividers(self) -> np.ndarray:
+        """Per-rank transfer-duration multipliers under
+        `LayerClockPolicy.GATED` (ones under UNIFORM).
+
+        Gating only has a target where a layer owns a private IO link:
+        Dedicated-IO SLR.  There, rank r's link clock drops from L*F to
+        the Cascaded-IO tier clock for layer r (divide-by-two counters),
+        so its transfer duration stretches by fast_freq / tier_freq —
+        [1, 1, 2, 4] for the paper's 4-layer stack.  BASELINE and MLR
+        share one bus (no per-layer domain to gate) and CASCADED already
+        runs the tier clocks by construction: divider 1 everywhere."""
+        R = self.n_ranks
+        if (self.policy.layer_clock != LayerClockPolicy.GATED
+                or self.io_model != IOModel.DEDICATED
+                or self.rank_org != RankOrg.SLR):
+            return np.ones(R, np.int64)
+        tiers = dataclasses.replace(self, io_model=IOModel.CASCADED)
+        return np.array([int(round(self.fast_freq_mhz
+                                   / tiers.layer_freq_mhz(r)))
+                         for r in range(R)], np.int64)
+
+    def effective_layer_freq_mhz(self, layer: int) -> float:
+        """`layer_freq_mhz` after per-layer clock gating: the frequency
+        the energy model prices the layer's standby current at."""
+        div = self.clock_dividers()
+        d = int(div[layer]) if layer < div.size else 1
+        return self.layer_freq_mhz(layer) / d
+
     @property
     def peak_bandwidth_gbps(self) -> float:
         """Peak data bandwidth in GB/s (paper Table 2: 3.2 base / 12.8 SMLA)."""
@@ -256,6 +299,10 @@ class StackConfig:
             raise ValueError(f"n_ranks_max={Rm} < n_ranks={R}")
         dur = np.zeros(Rm, np.int32)
         dur[:R] = [self.transfer_cycles(r) for r in range(R)]
+        # per-layer clock-gating dividers (ones unless GATED on dedicated
+        # SLR); padded ranks get 1 so padded dur stays untouched
+        clk_div = np.ones(Rm, np.int32)
+        clk_div[:R] = self.clock_dividers()
         # bus groups: which ranks contend on the same bus resource
         if self.io_model == IOModel.BASELINE or self.rank_org == RankOrg.MLR:
             n_groups, group_of_rank = 1, np.zeros(Rm, np.int32)
@@ -290,6 +337,8 @@ class StackConfig:
             "drain_sel": np.int32(int(self.policy.write_drain)),
             "sr_sel": np.int32(int(self.policy.self_refresh)),
             "post_sel": np.int32(int(self.policy.ref_postpone)),
+            "clk_sel": np.int32(int(self.policy.layer_clock)),
+            "clk_div": clk_div,
         }
 
     @property

@@ -128,7 +128,9 @@ def stack_energy(stack: StackConfig, horizon_ns: float, n_act: int,
     pre = max(1.0 - sr - pd - act, 0.0)
     standby = 0.0
     for layer in range(stack.layers):
-        f = stack.layer_freq_mhz(layer)
+        # gating-aware: under LayerClockPolicy.GATED a dedicated-SLR
+        # layer's clock-coupled current is priced at its gated tier clock
+        f = stack.effective_layer_freq_mhz(layer)
         i_ma = (sr * SR_MA + pd * PD_MA
                 + act * standby_current_ma(f, True)
                 + pre * standby_current_ma(f, False))

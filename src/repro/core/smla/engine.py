@@ -616,6 +616,13 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
     t_refi_eff, t_rfc_eff = policies.refresh_timings(pol, t_refi, t_rfc, B,
                                                      refresh_en)
     wq_hi, wq_lo = policies.drain_watermarks(Q, n_cores, core.mshr)
+    # DVFS-style per-layer clock gating: under LayerClockPolicy.GATED each
+    # rank's transfer duration stretches by its traced divider (ones for
+    # every organisation without private per-layer links, so the default
+    # path is bit-identical).  Applied once here — every stage reads the
+    # effective duration through ctx["dur"].
+    dur_eff = jnp.where(pol["clk_gated"],
+                        params["dur"] * params["clk_div"], params["dur"])
     ctx = {
         "n_cores": n_cores, "R": R, "B": B, "L": params["layers"],
         "core": core, "n_req": n_req,
@@ -625,7 +632,7 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         "t_sr": params["t_sr"], "t_xsr": params["t_xsr"],
         "refresh_en": refresh_en,
         "t_refi_eff": t_refi_eff, "t_rfc_eff": t_rfc_eff,
-        "dur": params["dur"], "group_of_rank": params["group_of_rank"],
+        "dur": dur_eff, "group_of_rank": params["group_of_rank"],
         "slotted": params["slotted"],
         "real_rank": jnp.arange(R, dtype=jnp.int32) < params["n_ranks"],
         "pol": pol,
@@ -826,12 +833,17 @@ def _with_timing_defaults(params: dict) -> dict:
     engine exactly."""
     missing = [k for k in _TIMING_DEFAULTS if k not in params]
     missing += [k for k in policies.SELECTOR_KEYS if k not in params]
-    if not missing:
+    need_div = "clk_div" not in params
+    if not missing and not need_div:
         return params
     p = dict(params)
     for k in missing:
         fill = BIG if k in _NEVER_DEFAULTS else 0
         p[k] = jnp.full(np.shape(p["t_cl"]), fill, jnp.int32)
+    if need_div:
+        # dur-shaped, not t_cl-shaped: the clock-gating dividers multiply
+        # the per-rank transfer durations; ones = ungated
+        p["clk_div"] = jnp.ones(np.shape(p["dur"]), jnp.int32)
     return p
 
 

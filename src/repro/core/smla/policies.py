@@ -18,6 +18,13 @@ choice as a **traced int32 selector** carried in the engine's params dict:
                                           power-down; exit charges t_xsr)
 * ``post_sel``   — `RefreshPostpone`:    strict deadline | JEDEC-style 8x
                                           postpone with drain-aware pull-in
+* ``clk_sel``    — `LayerClockPolicy`:   uniform | DVFS-style per-layer
+                                          clock gating (a Dedicated-IO SLR
+                                          layer's link drops to the
+                                          Cascaded tier clock; transfer
+                                          durations stretch by the
+                                          per-rank ``clk_div`` vector,
+                                          standby energy falls)
 
 Because the selectors are traced (not Python closure constants), one
 compiled engine program serves the whole policy cross-product with the
@@ -38,9 +45,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.smla.config import (ControllerPolicy, RefreshGranularity,
-                                    RefreshPostpone, RowPolicy, SchedPolicy,
-                                    SelfRefreshPolicy, WriteDrainPolicy)
+from repro.core.smla.config import (ControllerPolicy, LayerClockPolicy,
+                                    RefreshGranularity, RefreshPostpone,
+                                    RowPolicy, SchedPolicy, SelfRefreshPolicy,
+                                    WriteDrainPolicy)
 
 #: score/sentinel magnitude shared with the engine (engine.BIG aliases
 #: this) — the int32 score encoding above depends on it staying 2**30.
@@ -50,9 +58,12 @@ from repro.core.smla.config import (ControllerPolicy, RefreshGranularity,
 #: constants) stay closure-free; arithmetic/promotion is identical.
 BIG = np.int32(2**30)
 
-#: params keys carrying the traced policy selectors, in to_params order
+#: params keys carrying the traced policy selectors, in to_params order.
+#: `clk_sel` (DVFS-style per-layer clock gating) additionally carries its
+#: per-rank divider vector in the separate dur-shaped `clk_div` param —
+#: the selector alone decides whether the dividers apply.
 SELECTOR_KEYS = ("sched_sel", "row_sel", "ref_sel", "drain_sel",
-                 "sr_sel", "post_sel")
+                 "sr_sel", "post_sel", "clk_sel")
 
 #: JEDEC maximum number of postponed refresh commands per rank (the "8x
 #: postpone" of LPDDR/DDR4): the engine's per-rank debt counter is capped
@@ -103,6 +114,8 @@ POLICY_PRESETS: dict[str, ControllerPolicy] = {
         self_refresh=SelfRefreshPolicy.ENABLED),
     "postpone_8x": ControllerPolicy(
         ref_postpone=RefreshPostpone.POSTPONE_8X),
+    "layer_gated": ControllerPolicy(
+        layer_clock=LayerClockPolicy.GATED),
     "all_flipped": ControllerPolicy(
         scheduler=SchedPolicy.FCFS, row=RowPolicy.CLOSED_PAGE,
         refresh_gran=RefreshGranularity.PER_BANK,
@@ -151,6 +164,7 @@ def selector_view(params: dict) -> dict:
         == int(WriteDrainPolicy.OPPORTUNISTIC),
         "sr": params["sr_sel"] == int(SelfRefreshPolicy.ENABLED),
         "postpone": params["post_sel"] == int(RefreshPostpone.POSTPONE_8X),
+        "clk_gated": params["clk_sel"] == int(LayerClockPolicy.GATED),
     }
 
 

@@ -87,11 +87,21 @@ def synthetic_trace(seed: int, spec: WorkloadSpec, n_req: int,
     cur = rng.integers(0, n_rows, size=(n_ranks, n_banks))
     stay = rng.random(n_req) < spec.row_hit
     fresh = rng.integers(0, n_rows, size=n_req)
-    for i in range(n_req):
-        r, b = rank[i], bank[i]
-        if not stay[i]:
-            cur[r, b] = fresh[i]
-        row[i] = cur[r, b]
+    # Per-(rank,bank) forward fill of the open-row register: request i's
+    # row is the most recent non-stay `fresh` draw targeting its bank, or
+    # the bank's initial `cur` if none precedes it.  Vectorised per bank
+    # key (<= n_ranks*n_banks maximum.accumulate passes) instead of one
+    # Python iteration per request — draw order above is untouched, so
+    # the stream is bit-identical to the historical loop on every seed.
+    key = rank * n_banks + bank
+    for k in np.unique(key):
+        m = key == k
+        g_stay = stay[m]
+        seen = np.where(~g_stay, np.arange(g_stay.size), -1)
+        last = np.maximum.accumulate(seen)
+        start = cur[k // n_banks, k % n_banks]
+        row[m] = np.where(last >= 0,
+                          fresh[m][np.maximum(last, 0)], start)
     # writes LAST: the draw must not perturb inst/rank/bank/row streams.
     wr = (rng.random(n_req) < spec.write_frac).astype(np.int32)
     return {"inst": inst,
@@ -134,7 +144,8 @@ def stack_traces(trace_list: list[dict]) -> dict:
 
 def lm_serving_trace(seed: int, n_req: int, n_ranks: int, n_banks: int,
                      kv_fraction: float = 0.7,
-                     kv_write_frac: float = 0.1) -> dict:
+                     kv_write_frac: float = 0.1,
+                     n_rows: int = 4096) -> dict:
     """A trace shaped like LM decode traffic: long sequential KV-cache
     sweeps (high row locality) interleaved with weight streaming — used to
     drive the simulator from this framework's own workloads.
@@ -146,12 +157,75 @@ def lm_serving_trace(seed: int, n_req: int, n_ranks: int, n_banks: int,
     """
     spec = WorkloadSpec("lm.decode", 45.0, 0.9 * kv_fraction + 0.05,
                         write_frac=kv_write_frac)
-    t = synthetic_trace(seed, spec, n_req, n_ranks, n_banks)
+    t = synthetic_trace(seed, spec, n_req, n_ranks, n_banks, n_rows=n_rows)
     # retarget writes at the KV append tail: consecutive writes walk forward
     # one row every `n_banks` appends (row granularity >> one K/V entry).
     w = np.flatnonzero(t["wr"])
     if w.size:
         rng = np.random.default_rng(seed + 1)
-        base = int(rng.integers(0, 4096))
-        t["row"][w] = (base + np.arange(w.size) // max(n_banks, 1)) % 4096
+        base = int(rng.integers(0, n_rows))
+        t["row"][w] = (base + np.arange(w.size) // max(n_banks, 1)) % n_rows
     return t
+
+
+# ----------------------------------------------------------------------------
+# serving traffic classes (the serve<->sim bridge's parameter axis)
+# ----------------------------------------------------------------------------
+
+ARRIVALS = ("poisson", "gamma")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficMix:
+    """One parameterised LM-serving traffic class for the serve<->sim
+    bridge (`repro.serve.bridge`): how a request stream captured from the
+    serving engine is scaled out into many simulated users.
+
+    prefill_frac  share of *tokens* processed in prefill bursts (prompt
+                  ingestion arrives as one clump of requests) vs stepwise
+                  decode; 0.05 is a decode-dominated chat tail, 0.5 a
+                  summarisation-style ingest-heavy front.
+    arrival       inter-arrival process of token boundaries per tenant:
+                  "poisson" (exponential gaps) or "gamma" (same mean,
+                  tunable burstiness).
+    cv2           squared coefficient of variation of the gamma gaps
+                  (1.0 == poisson); >1 clumps tokens into bursts — the
+                  multi-tenant interference case NOM-style inter-bank
+                  windows (arXiv:2004.09923) are designed around.
+    n_tenants     simulated users interleaved at the controller; each
+                  tenant is one core row of the trace with its own
+                  disjoint KV row region.
+    intensity     token arrivals per kilo-instruction, per tenant (each
+                  token then expands to its profile's worth of memory
+                  requests, so the MPKI-equivalent is intensity x
+                  requests-per-token).  ~1.0 sits near the arrival/
+                  service knee of the reduced-model profile, where the
+                  arrival process actually shapes bandwidth.
+    """
+    name: str
+    prefill_frac: float = 0.2
+    arrival: str = "poisson"
+    cv2: float = 1.0
+    n_tenants: int = 4
+    intensity: float = 40.0
+
+    def __post_init__(self):
+        if self.arrival not in ARRIVALS:
+            raise ValueError(f"arrival={self.arrival!r} not in {ARRIVALS}")
+        if not 0.0 < self.prefill_frac < 1.0:
+            raise ValueError(f"prefill_frac={self.prefill_frac} not in (0,1)")
+        if self.cv2 <= 0 or self.n_tenants < 1 or self.intensity <= 0:
+            raise ValueError(f"invalid TrafficMix: {self}")
+
+
+def arrival_gaps(rng: np.random.Generator, mix: TrafficMix,
+                 n: int) -> np.ndarray:
+    """Per-token inter-arrival gaps (instructions) for one tenant.
+
+    Mean gap is 1000/intensity either way; "gamma" reshapes the same mean
+    into bursts (shape 1/cv2, scale mean*cv2 — variance cv2 * mean^2),
+    reducing to the exponential draw exactly when cv2 == 1."""
+    mean = 1000.0 / mix.intensity
+    if mix.arrival == "poisson" or mix.cv2 == 1.0:
+        return rng.exponential(mean, size=n) + 1.0
+    return rng.gamma(1.0 / mix.cv2, mean * mix.cv2, size=n) + 1.0

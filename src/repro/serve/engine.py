@@ -49,7 +49,7 @@ def batch_dp_axes(policy: str):
 
 
 def make_serve_fns(cfg: ModelConfig, pcfg: ParallelConfig, scfg: ServeConfig,
-                   mesh=None, long_ctx: bool = False):
+                   mesh=None):
     """Returns (prefill_fn, decode_fn, shardings dict or None)."""
     model = get_model(cfg)
 
@@ -90,8 +90,16 @@ class Engine:
         self.params = params
         self.mesh = mesh
         self.model = get_model(cfg)
-        self.prefill_fn, self.decode_fn, _ = make_serve_fns(
+        self.prefill_fn, self.decode_fn, self.shardings = make_serve_fns(
             cfg, pcfg, scfg, mesh)
+        if self.shardings is not None:
+            # apply the placement policy the shardings encode: MLR keeps
+            # params TP-sharded over 'model', SLR replicates them so the
+            # model axis serves as extra request parallelism.  (They were
+            # previously computed and dropped — params stayed wherever
+            # the caller left them, so mlr/slr never changed placement.)
+            self.params = jax.device_put(self.params,
+                                         self.shardings["params"])
         self.rng = jax.random.PRNGKey(0)
 
     def _sample(self, logits):
@@ -101,22 +109,44 @@ class Engine:
         return jax.random.categorical(
             k, logits[:, -1] / self.scfg.temperature)[:, None]
 
-    def generate(self, batch, max_new_tokens: int):
+    def generate(self, batch, max_new_tokens: int, observer=None):
         """batch: model inputs incl. tokens (B, S_prompt).  Returns
-        (B, max_new_tokens) generated ids (greedy/temperature)."""
+        (B, <= max_new_tokens) generated ids (greedy/temperature).
+
+        Lanes that have emitted `eos_id` are *frozen*: every subsequent
+        position in that lane is `eos_id`, never a live sample.  (The
+        sampler previously kept decoding into finished lanes, emitting
+        post-EOS garbage tokens unmasked.)  The loop stops early once all
+        lanes are done.
+
+        `observer`, when given, is called on the instrumented serving
+        path — once after prefill and once after every decode step — as
+        ``observer(kind, done=<pre-step (B,) finished mask>,
+        lengths=<post-step per-lane cache lengths>)``; the serve<->sim
+        bridge (`repro.serve.bridge`) uses it to capture per-step
+        memory-request streams without re-implementing this loop."""
         b = batch["tokens"].shape[0]
+        eos = self.scfg.eos_id
         cache = self.model.init_cache(self.cfg, b, self.scfg.max_seq,
                                       self.pcfg)
         cache, logits = self.prefill_fn(self.params, batch, cache)
-        outs = []
-        tok = self._sample(logits).astype(jnp.int32)
         done = jnp.zeros((b,), bool)
+        if observer is not None:
+            observer("prefill", done=done, lengths=cache["lengths"])
+        tok = self._sample(logits).astype(jnp.int32)
+        outs = []
         for _ in range(max_new_tokens):
+            if eos >= 0:
+                tok = jnp.where(done[:, None], jnp.int32(eos), tok)
             outs.append(tok)
-            cache, logits = self.decode_fn(self.params, tok, cache)
-            tok = self._sample(logits).astype(jnp.int32)
-            if self.scfg.eos_id >= 0:
-                done = done | (tok[:, 0] == self.scfg.eos_id)
+            if eos >= 0:
+                done = done | (tok[:, 0] == eos)
                 if bool(done.all()):
                     break
+            if len(outs) == max_new_tokens:
+                break            # the last token's KV is never consumed
+            cache, logits = self.decode_fn(self.params, tok, cache)
+            if observer is not None:
+                observer("decode", done=done, lengths=cache["lengths"])
+            tok = self._sample(logits).astype(jnp.int32)
         return jnp.concatenate(outs, axis=1)

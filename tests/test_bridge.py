@@ -1,0 +1,265 @@
+"""Serve<->sim bridge + per-layer clock-gating axis.
+
+Three contracts close the serve<->sim loop safely:
+
+* **Capture is passive**: `capture_generate` returns bit-identical tokens
+  to an unobserved `Engine.generate`, and the captured trace's *write*
+  stream is exact — one KV-append write per token appended while the lane
+  was live, rows monotone per lane (the KV tail never rewinds).
+* **Scale-out is faithful**: `mix_trace` built from a measured profile
+  lands in the same distributional regime as the hand-built
+  `lm_serving_trace` (write fraction, monotone-write share), and both the
+  captured and synthesised traces complete in the cycle engine.
+* **The clock axis is traced**: flipping `LayerClockPolicy` reuses the
+  compiled executable (0 compiles), only bites Dedicated-IO SLR (the one
+  organisation with private per-layer links to gate), and analytic
+  calibration stays an upper bound.
+
+Plus two regression pins that ride along: the vectorised
+`synthetic_trace` row fill is bit-identical to the historical per-request
+loop, and `lm_serving_trace` threads `n_rows` through (it used to
+hardcode 4096)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import ParallelConfig, get_config, reduce_config
+from repro.core.smla import engine, policies
+from repro.core.smla.analytic import estimate_service_cycles
+from repro.core.smla.config import LayerClockPolicy, paper_configs
+from repro.core.smla.engine import SimOptions, simulate
+from repro.core.smla.traces import (TrafficMix, WorkloadSpec, arrival_gaps,
+                                    lm_serving_trace, synthetic_trace)
+from repro.serve import bridge
+from repro.serve.engine import Engine, ServeConfig
+
+PCFG = ParallelConfig(attn_impl="chunked", moe_impl="dense", remat="none")
+
+
+@pytest.fixture(scope="module")
+def capture():
+    """One captured run on the reduced model, shared by the module:
+    (generated tokens, CapturedStream, the engine's batch)."""
+    cfg = reduce_config(get_config("tinyllama-1.1b"))
+    model = models.get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, PCFG, ServeConfig(max_seq=64, eos_id=3), params)
+    batch = models.make_batch(jax.random.PRNGKey(1), cfg, 4, 8, kind="serve")
+    out, cap = bridge.capture_generate(eng, batch, 16)
+    return eng, batch, out, cap
+
+
+# ----------------------------------------------------------------------------
+# capture: passive observation, exact write accounting
+# ----------------------------------------------------------------------------
+
+def test_capture_matches_plain_generate(capture):
+    """The observer must not perturb generation."""
+    eng, batch, out, cap = capture
+    plain = eng.generate(batch, 16)
+    assert out.shape == plain.shape
+    assert (np.asarray(out) == np.asarray(plain)).all()
+    assert cap.steps[0].kind == "prefill"
+    assert all(s.kind == "decode" for s in cap.steps[1:])
+
+
+def test_captured_trace_write_invariants(capture):
+    """Writes = one per live-lane token appended; KV tail rows monotone."""
+    _, _, _, cap = capture
+    n_rows = 4096
+    tr = bridge.captured_trace(cap, n_ranks=4, n_banks=2, n_rows=n_rows)
+    expect = int(cap.prompt_tokens.sum() + cap.live_decode_tokens.sum())
+    assert int(tr["wr"].sum()) == expect
+    assert tr["inst"].shape[0] == cap.n_lanes
+    for k in ("rank", "bank", "row"):
+        assert tr[k].min() >= 0
+    assert tr["rank"].max() < 4 and tr["bank"].max() < 2
+    assert tr["row"].max() < n_rows
+    for lane in range(cap.n_lanes):
+        w = tr["row"][lane][tr["wr"][lane] == 1]
+        assert (np.diff(w.astype(np.int64)) >= 0).all(), \
+            f"lane {lane} KV tail rewound"
+        # arrivals never go backwards either (steps are ordered bursts)
+        assert (np.diff(tr["inst"][lane]) >= 0).all()
+
+
+def test_captured_trace_completes_in_engine(capture):
+    """The lowered capture is a valid engine workload end to end."""
+    _, _, _, cap = capture
+    sc = paper_configs(4)["cascaded_slr"]
+    tr = bridge.captured_trace(cap, sc.n_ranks, sc.banks_per_rank)
+    m = simulate(sc, tr, SimOptions(horizon=3_000_000))
+    assert bool(np.asarray(m["complete"]).all())
+    assert int(m["n_wr"]) == int(tr["wr"].sum())
+
+
+# ----------------------------------------------------------------------------
+# scale-out: profile -> TrafficMix traces, vs the hand-built LM trace
+# ----------------------------------------------------------------------------
+
+def test_mix_trace_vs_lm_serving_distribution(capture):
+    """The bridge-synthesised stream must land in `lm_serving_trace`'s
+    regime: ~10% writes and a near-perfectly monotone KV write tail —
+    not uniform-random writes (broken address model) nor write-free
+    (dropped appends)."""
+    _, _, _, cap = capture
+    prof = bridge.StreamProfile.from_capture(cap)
+    mix = TrafficMix("smoke", prefill_frac=0.2, n_tenants=4, intensity=1.0)
+    tr = bridge.mix_trace(0, mix, prof, 1200, 4, 2)
+    ref = lm_serving_trace(0, 1200, 4, 2, kv_write_frac=0.1)
+
+    wf = tr["wr"].mean()
+    assert abs(wf - ref["wr"].mean()) < 0.06, (wf, ref["wr"].mean())
+    # monotone share of the write stream (sessions reset the tail, so
+    # slightly below lm_serving_trace's single unbroken tail)
+    for t in (tr, ref):
+        rows = t["row"][0][t["wr"][0] == 1] if t["row"].ndim == 2 \
+            else t["row"][t["wr"] == 1]
+        mono = (np.diff(rows.astype(np.int64)) >= 0).mean()
+        assert mono > 0.9, mono
+    # per-tenant KV writes stay inside the tenant's own arena
+    region, kv_base = bridge._regions(4096, mix.n_tenants)
+    for ten in range(mix.n_tenants):
+        w = tr["row"][ten][tr["wr"][ten] == 1]
+        assert w.min() >= kv_base[ten]
+        assert w.max() < kv_base[ten] + region
+
+
+def test_mix_trace_completes_in_engine(capture):
+    _, _, _, cap = capture
+    prof = bridge.StreamProfile.from_capture(cap)
+    sc = paper_configs(4)["cascaded_mlr"]
+    tr = bridge.mix_trace(3, TrafficMix("t", intensity=1.0), prof, 400,
+                          4, sc.banks_per_rank)
+    m = simulate(sc, tr, SimOptions(horizon=3_000_000))
+    assert bool(np.asarray(m["complete"]).all())
+
+
+def test_arrival_gaps_mean_and_burstiness():
+    rng = np.random.default_rng(0)
+    mean = 1000.0 / 2.0
+    pois = arrival_gaps(rng, TrafficMix("p", intensity=2.0), 20_000)
+    rng = np.random.default_rng(0)
+    burst = arrival_gaps(rng, TrafficMix("g", arrival="gamma", cv2=8.0,
+                                         intensity=2.0), 20_000)
+    for g in (pois, burst):
+        assert abs(g.mean() - (mean + 1.0)) / mean < 0.05
+    assert burst.var() > 4 * pois.var()       # cv2=8 really is burstier
+    with pytest.raises(ValueError):
+        TrafficMix("bad", arrival="pareto")
+    with pytest.raises(ValueError):
+        TrafficMix("bad", prefill_frac=1.5)
+
+
+# ----------------------------------------------------------------------------
+# per-layer clock gating: one more traced axis, zero extra compiles
+# ----------------------------------------------------------------------------
+
+def _clk_trace(sc, n_req=80):
+    spec = WorkloadSpec("clk", 25.0, 0.5, write_frac=0.2)
+    t = synthetic_trace(11, spec, n_req, sc.n_ranks, sc.banks_per_rank)
+    return {k: v[None] for k, v in t.items()}
+
+
+def test_clock_axis_adds_zero_compiles():
+    sc = paper_configs(4)["dedicated_slr"]
+    tr = _clk_trace(sc)
+    simulate(sc, tr, SimOptions(horizon=200_000))        # warm
+    engine.reset_compile_count()
+    gated = dataclasses.replace(
+        sc, policy=policies.POLICY_PRESETS["layer_gated"])
+    m_g = simulate(gated, tr, SimOptions(horizon=200_000))
+    assert engine.compile_count() == 0, \
+        "clk_sel/clk_div leaked into the static compile signature"
+    # gating stretches dedicated-SLR transfers -> makespan grows
+    m_u = simulate(sc, tr, SimOptions(horizon=200_000))
+    assert float(m_g["makespan_ns"]) > float(m_u["makespan_ns"])
+    # analytic horizon stays an upper bound under gating
+    est_ns = estimate_service_cycles(gated, tr) * gated.unit_ns
+    assert est_ns >= float(m_g["makespan_ns"])
+
+
+def test_clock_gating_only_bites_dedicated_slr():
+    """Organisations with no private per-layer links to gate (baseline,
+    MLR striping, already-tiered cascaded) must be bit-identical."""
+    gated_pol = policies.POLICY_PRESETS["layer_gated"]
+    cfgs = paper_configs(4)
+    assert (dataclasses.replace(cfgs["dedicated_slr"], policy=gated_pol)
+            .clock_dividers() > 1).any()
+    for name in ("baseline", "cascaded_mlr", "cascaded_slr",
+                 "dedicated_mlr"):
+        sc = cfgs[name]
+        assert (dataclasses.replace(
+            sc, policy=gated_pol).clock_dividers() == 1).all(), name
+        tr = _clk_trace(sc)
+        m0 = simulate(sc, tr, SimOptions(horizon=200_000))
+        m1 = simulate(dataclasses.replace(sc, policy=gated_pol), tr,
+                      SimOptions(horizon=200_000))
+        for k in ("makespan_ns", "n_act", "served"):
+            assert np.array_equal(np.asarray(m0[k]), np.asarray(m1[k])), \
+                (name, k)
+
+
+def test_clock_dividers_follow_cascaded_tiers():
+    sc = paper_configs(4)["dedicated_slr"]
+    gated = dataclasses.replace(sc,
+                                policy=policies.POLICY_PRESETS["layer_gated"])
+    div = gated.clock_dividers()
+    assert div[0] == 1 and (np.diff(div) >= 0).all()
+    for r in range(sc.n_ranks):
+        assert gated.effective_layer_freq_mhz(r) == pytest.approx(
+            gated.layer_freq_mhz(r) / div[r])
+    assert "clkgate" in gated.policy.tag
+
+
+# ----------------------------------------------------------------------------
+# satellite regression pins: traces.py
+# ----------------------------------------------------------------------------
+
+def test_synthetic_trace_matches_reference_loop():
+    """The vectorised open-row forward fill vs the historical per-request
+    Python loop — bit-identical on every field."""
+    for seed, spec in [(0, WorkloadSpec("a", 10.0, 0.6, write_frac=0.3)),
+                       (7, WorkloadSpec("b", 40.0, 0.2, bank_spread=0.3)),
+                       (3, WorkloadSpec("c", 1.0, 0.95, write_frac=0.5))]:
+        t = synthetic_trace(seed, spec, 500, 4, 4)
+        ref = _reference_trace(seed, spec, 500, 4, 4)
+        for k in t:
+            assert np.array_equal(t[k], ref[k]), (spec.name, k)
+
+
+def _reference_trace(seed, spec, n_req, n_ranks, n_banks, n_rows=4096):
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1000.0 / spec.mpki, size=n_req) + 1.0
+    inst = np.cumsum(gaps).astype(np.float32)
+    rank = rng.integers(0, n_ranks, size=n_req)
+    if spec.bank_spread >= 1.0:
+        bank = rng.integers(0, n_banks, size=n_req)
+    else:
+        p = np.exp(-np.arange(n_banks) / max(spec.bank_spread * n_banks, .5))
+        bank = rng.choice(n_banks, size=n_req, p=p / p.sum())
+    row = np.empty(n_req, np.int64)
+    cur = rng.integers(0, n_rows, size=(n_ranks, n_banks))
+    stay = rng.random(n_req) < spec.row_hit
+    fresh = rng.integers(0, n_rows, size=n_req)
+    for i in range(n_req):
+        r, b = rank[i], bank[i]
+        if not stay[i]:
+            cur[r, b] = fresh[i]
+        row[i] = cur[r, b]
+    wr = (rng.random(n_req) < spec.write_frac).astype(np.int32)
+    return {"inst": inst, "rank": rank.astype(np.int32),
+            "bank": bank.astype(np.int32), "row": row.astype(np.int32),
+            "wr": wr}
+
+
+def test_lm_serving_trace_threads_n_rows():
+    for n_rows in (64, 256):
+        t = lm_serving_trace(2, 400, 4, 2, n_rows=n_rows)
+        assert t["row"].max() < n_rows      # used to hardcode 4096
+        assert t["row"].min() >= 0
+        assert 0 < t["wr"].sum() < 400

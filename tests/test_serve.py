@@ -1,6 +1,7 @@
 """Serving engine: generation, policies, cache semantics."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -64,6 +65,75 @@ def test_slr_spec_strips_model_axis():
     assert out["w"] == P("data", None)
     assert out["e"] == P("data", None)
     assert out["n"] == P()
+
+
+def test_eos_lanes_frozen_after_stop():
+    """A lane that emitted EOS must be frozen to eos_id for every later
+    position — never a live sample.  (The sampler previously kept
+    decoding into finished lanes, emitting post-EOS garbage.)"""
+    cfg, eng = _engine()
+    eng.scfg = ServeConfig(max_seq=96, eos_id=5)
+    script = iter([
+        jnp.array([[2], [7]], jnp.int32),
+        jnp.array([[5], [7]], jnp.int32),   # lane 0 emits EOS here
+        jnp.array([[9], [7]], jnp.int32),   # would-be post-EOS garbage...
+        jnp.array([[9], [7]], jnp.int32),
+        jnp.array([[9], [7]], jnp.int32),
+    ])
+    eng._sample = lambda logits: next(script)
+    out = np.asarray(eng.generate({"tokens": jnp.ones((2, 6), jnp.int32)},
+                                  5))
+    assert out.shape == (2, 5)
+    assert list(out[0]) == [2, 5, 5, 5, 5]  # ...never reaches the output
+    assert list(out[1]) == [7, 7, 7, 7, 7]  # live lane unaffected
+
+
+def test_eos_all_done_appends_eos_then_stops():
+    """When every lane finishes, the EOS tokens themselves still land in
+    the output (the loop used to break before appending them) and the
+    loop stops early."""
+    cfg, eng = _engine()
+    eng.scfg = ServeConfig(max_seq=96, eos_id=5)
+    script = iter([jnp.array([[2], [7]], jnp.int32),
+                   jnp.array([[5], [5]], jnp.int32)])
+    eng._sample = lambda logits: next(script)
+    out = np.asarray(eng.generate({"tokens": jnp.ones((2, 6), jnp.int32)},
+                                  8))
+    assert out.shape == (2, 2)              # early stop, EOS included
+    assert list(out[:, 1]) == [5, 5]
+
+
+def test_placement_shardings_applied():
+    """Engine.__init__ must APPLY the placement the shardings encode
+    (they used to be computed and dropped): MLR TP-shards params over
+    'model', SLR replicates them.  Multi-device -> subprocess."""
+    from conftest import run_subprocess_jax
+    out = run_subprocess_jax(r'''
+import jax
+import numpy as np
+from jax.sharding import AxisType
+
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+
+from repro import models
+from repro.configs import ParallelConfig, get_config, reduce_config
+from repro.serve.engine import Engine, ServeConfig
+
+cfg = reduce_config(get_config("tinyllama-1.1b"))
+params = models.get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+pcfg = ParallelConfig(attn_impl="chunked", moe_impl="dense", remat="none")
+for policy in ("mlr", "slr"):
+    eng = Engine(cfg, pcfg, ServeConfig(max_seq=64, policy=policy),
+                 params, mesh=mesh)
+    leaves = jax.tree.leaves(eng.params)
+    sharded = any("model" in str(l.sharding.spec) for l in leaves)
+    out = eng.generate({"tokens": np.ones((2, 8), np.int32)}, 3)
+    print(policy, "model_sharded=" + str(sharded),
+          "shape=" + str(tuple(np.asarray(out).shape)))
+''', n_devices=4)
+    assert "mlr model_sharded=True shape=(2, 3)" in out
+    assert "slr model_sharded=False shape=(2, 3)" in out
 
 
 @pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-7b", "whisper-base"])
