@@ -1,6 +1,7 @@
 """CI gate: the chunked sweep engine's early exit must actually engage.
 
-Reads the fig11, fig_policy, fig_refresh, and fig_serve sections of
+Reads the fig11, fig_policy, fig_refresh, fig_fault, and fig_serve
+sections of
 `BENCH_smla_sweep.json` (written by `benchmarks/run.py --smoke` just
 before this runs), rehydrates each through `benchmarks._util.
 FigureRecord.from_json` — the SAME typed record the emitters write, so
@@ -24,7 +25,8 @@ import sys
 from benchmarks._util import (BENCH_JSON_DEFAULT, BENCH_JSON_ENV,
                               FigureRecord)
 
-GATED_FIGURES = ("fig11", "fig_policy", "fig_refresh", "fig_serve")
+GATED_FIGURES = ("fig11", "fig_policy", "fig_refresh", "fig_fault",
+                 "fig_serve")
 
 
 def check_figure(name: str, data: dict) -> str | None:

@@ -23,6 +23,7 @@ BENCHES = [
     "benchmarks.paper_fig14",         # MPKI vs energy
     "benchmarks.paper_fig_policy",    # controller-policy sensitivity
     "benchmarks.paper_fig_refresh",   # refresh-management / deep power states
+    "benchmarks.paper_fig_fault",     # fault injection / graceful degradation
     "benchmarks.paper_fig_serve",     # serve<->sim loop: captured LM traffic
     "benchmarks.collective_schedules",# cascaded vs dedicated cross-pod sync
     "benchmarks.smla_pipe_bench",     # SMLA pipeline kernel
@@ -55,7 +56,7 @@ def main(argv=None) -> int:
               file=sys.stderr)
         return 2
 
-    failures = 0
+    failed: list[tuple[str, int]] = []
     for mod in benches:
         print(f"\n===== {mod} =====", flush=True)
         t0 = time.time()
@@ -64,12 +65,19 @@ def main(argv=None) -> int:
         dt = time.time() - t0
         sys.stdout.write(r.stdout)
         if r.returncode != 0:
-            failures += 1
+            failed.append((mod, r.returncode))
             sys.stdout.write(f"[FAILED rc={r.returncode}]\n")
             sys.stdout.write(r.stderr[-2000:] + "\n")
         print(f"[{mod}: {dt:.1f}s]", flush=True)
-    print(f"\n{len(benches) - failures}/{len(benches)} benchmarks ok")
-    return 1 if failures else 0
+    # per-figure failure summary: every module always runs (a broken
+    # figure never shadows its siblings), and the tail of the log names
+    # exactly which ones need attention
+    print(f"\n{len(benches) - len(failed)}/{len(benches)} benchmarks ok")
+    if failed:
+        print("failed benchmarks:", file=sys.stderr)
+        for mod, rc in failed:
+            print(f"  {mod} (rc={rc})", file=sys.stderr)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

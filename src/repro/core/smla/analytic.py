@@ -12,8 +12,8 @@ from repro.core.smla import energy as energy_mod
 from repro.core.smla import engine as engine_mod
 from repro.core.smla import policies as policies_mod
 from repro.core.smla import sweep as sweep_mod
-from repro.core.smla.config import (IOModel, RankOrg, RefreshGranularity,
-                                    RowPolicy, SelfRefreshPolicy, StackConfig,
+from repro.core.smla.config import (IOModel, RefreshGranularity, RowPolicy,
+                                    SelfRefreshPolicy, StackConfig,
                                     paper_configs)
 from repro.core.smla.engine import CoreParams, SimOptions, simulate
 from repro.core.smla.traces import WORKLOADS, WorkloadSpec, core_traces
@@ -23,32 +23,51 @@ from repro.core.smla.traces import WORKLOADS, WorkloadSpec, core_traces
 # analytic service-time model
 # ----------------------------------------------------------------------------
 
-def _timing_view(stack: StackConfig) -> tuple[float, float, float, float]:
-    """(activate+CAS latency, mean transfer, max transfer, refresh factor)
-    in fast cycles for `stack`, under its controller policy.
+def _timing_view(stack: StackConfig) -> tuple:
+    """(activate+CAS latency, mean transfer, max transfer, refresh
+    factor, fault layout) in fast cycles for `stack`, under its
+    controller policy AND its fault configuration.
 
     Closed-page pays the same per-access total (the precharge trails the
     access instead of preceding it), so `lat` is policy-independent.
     Per-bank refresh blocks one bank for the shorter tRFCpb ~= tRFC/2
     instead of the whole rank for tRFC, so its unavailability factor is
     correspondingly lighter — keeping the estimate tight enough that
-    per-bank cells land in faster buckets."""
-    R = stack.n_ranks
+    per-bank cells land in faster buckets.
+
+    Fault awareness (each adjustment conservative per axis, so the
+    estimate stays a true *upper* bound on degraded stacks while the
+    clean path is numerically untouched): durations and grouping come
+    from `StackConfig.fault_layout`; every transfer is inflated by the
+    ECC re-read expectation (1 + 1/ecc_every); the refresh factor uses
+    the most-derated rank's shortened tREFI."""
+    lay = stack.fault_layout()
+    R = lay["n_ranks"]
     # clock_dividers() is all-ones unless the policy gates per-layer
-    # clocks (then upper dedicated-SLR ranks transfer slower), so the
-    # default calibration is untouched
-    dur = np.array([stack.transfer_cycles(r) for r in range(R)], float) \
-        * stack.clock_dividers()
+    # clocks (then upper dedicated-SLR ranks transfer slower), mapped
+    # through the survivor renumbering exactly as to_params lowers it,
+    # so the default calibration is untouched
+    div_full = stack.clock_dividers()
+    if R == len(lay["survivors"]) and div_full.size == stack.layers:
+        div = div_full[np.array(lay["survivors"])]
+    else:
+        div = div_full[:R]
+    dur = np.asarray(lay["dur"], float) * div
+    if lay["ecc_every"]:
+        dur = dur * (1.0 + 1.0 / lay["ecc_every"])
     lat = float(stack.t_rp + stack.t_rcd + stack.t_cl)
     t_refi, t_rfc = float(stack.t_refi), float(stack.t_rfc)
     if stack.policy.refresh_gran == RefreshGranularity.PER_BANK:
         t_rfc = float(policies_mod.t_rfc_per_bank(stack.t_rfc))
+    derate = int(np.max(lay["ref_derate"]))
+    if t_refi > 0 and derate > 1:
+        t_refi = max(t_refi // derate, 1.0)
     refresh = 1.0
     if t_refi > 0:
         # each rank (all-bank) / bank (per-bank) is unavailable t_rfc out
         # of every tREFI
         refresh = t_refi / max(t_refi - t_rfc, 1.0)
-    return lat, float(dur.mean()), float(dur.max()), refresh
+    return lat, float(dur.mean()), float(dur.max()), refresh, lay
 
 
 def _write_frac(traces: dict) -> float:
@@ -90,17 +109,20 @@ def estimate_service_cycles(stack: StackConfig, traces: dict,
     bound are flagged, not absorbed."""
     n_cores, n_req = np.shape(traces["inst"])
     total = n_cores * n_req
-    lat, dur_mean, dur_max, refresh = _timing_view(stack)
+    lat, dur_mean, dur_max, refresh, lay = _timing_view(stack)
     wr = _write_frac(traces)
     wr_extra = (stack.t_rp if stack.policy.row == RowPolicy.CLOSED_PAGE
                 else 0)
     wr_cost = wr * (stack.t_wr + stack.t_wtr + wr_extra)
     sr_cost = (stack.t_xsr if stack.policy.self_refresh
                == SelfRefreshPolicy.ENABLED else 0)
-    n_groups = (1 if stack.io_model == IOModel.BASELINE
-                or stack.rank_org == RankOrg.MLR else stack.n_ranks)
+    # shared-resource widths from the fault layout: a degraded stack has
+    # fewer bus groups and fewer live banks, so both queues deepen —
+    # the clean layout reproduces the historical widths exactly
+    n_groups = lay["n_groups"]
+    banks_total = lay["n_ranks"] * stack.banks_per_rank
     bus = total * (dur_mean + wr * stack.t_wtr) / max(n_groups, 1)
-    bank = total * (lat + wr * stack.t_wr) / max(stack.banks_total, 1)
+    bank = total * (lat + wr * stack.t_wr) / max(banks_total, 1)
     arrival = float(np.max(np.asarray(traces["inst"])[:, -1])) \
         / core.inst_per_fast_cycle
     capq = max(min(core.q_size, n_cores * core.mshr), 1)
@@ -126,7 +148,7 @@ def default_horizon(cells: Sequence["sweep_mod.SweepCell"],
     worst = 0.0
     for c in cells:
         n_cores, n_req = np.shape(c.traces["inst"])
-        lat, _, dur_max, refresh = _timing_view(c.stack)
+        lat, _, dur_max, refresh, _lay = _timing_view(c.stack)
         arrival = float(np.max(np.asarray(c.traces["inst"])[:, -1])) \
             / core.inst_per_fast_cycle
         # +tWR+tWTR per request: a fully serialised write stream pays the

@@ -15,6 +15,8 @@ import enum
 
 import numpy as np
 
+from repro.core.smla.faults import ECC_OFF, DegradeMode, FaultConfig
+
 
 class IOModel(enum.IntEnum):
     BASELINE = 0      # conventional Wide-IO: one layer drives the bus at F
@@ -172,6 +174,40 @@ class StackConfig:
     # every selector is *traced* by the engine, so sweeping the policy
     # cross-product reuses the same compiled program.
     policy: ControllerPolicy = ControllerPolicy()
+    # Fault axis (core/smla/faults.py): dead layers, stuck TSV groups,
+    # weak-retention derating, transient-error rate, and the degradation
+    # mode — all lowered into *traced* params by `fault_layout` /
+    # `to_params`, so the fault x degradation cross-product never adds a
+    # compile.  The clean default reproduces the fault-free stack
+    # bit-for-bit.
+    faults: FaultConfig = FaultConfig()
+
+    def __post_init__(self):
+        # eager validation: clear ValueErrors at construction time instead
+        # of cryptic traced-shape errors mid-compile
+        if self.layers < 1:
+            raise ValueError(f"layers={self.layers}: want >= 1")
+        if self.banks_per_rank < 1:
+            raise ValueError(
+                f"banks_per_rank={self.banks_per_rank}: want >= 1")
+        if self.io_bits < 1 or self.request_bytes < 1:
+            raise ValueError(
+                f"io_bits={self.io_bits}, request_bytes="
+                f"{self.request_bytes}: want >= 1")
+        if self.base_freq_mhz <= 0:
+            raise ValueError(
+                f"base_freq_mhz={self.base_freq_mhz}: want > 0")
+        if self.request_bytes * 8 < self.io_bits:
+            raise ValueError(
+                f"request_bytes={self.request_bytes} smaller than one "
+                f"bus beat (io_bits={self.io_bits})")
+        for f in ("t_rcd_ns", "t_rp_ns", "t_cl_ns", "t_wr_ns", "t_wtr_ns",
+                  "t_refi_ns", "t_rfc_ns", "pd_idle_ns", "sr_idle_ns",
+                  "t_xsr_ns"):
+            if getattr(self, f) < 0:
+                raise ValueError(
+                    f"{f}={getattr(self, f)}: negative timing")
+        self.faults.validate_for(self.layers)
 
     # ---- derived quantities -------------------------------------------------
     @property
@@ -220,6 +256,107 @@ class StackConfig:
         # transfer spans (beats-1) rotations plus the final slot, and layer
         # r's data takes r cut-through hops to reach the bottom (SS4.2.1).
         return (beats - 1) * self.layers + 1 + rank
+
+    @property
+    def survivor_layers(self) -> tuple[int, ...]:
+        """Physical indices of layers with usable IO (not killed, not
+        behind a stuck TSV group), in chain order."""
+        dead = self.faults.effective_dead(self.layers)
+        return tuple(l for l in range(self.layers) if l not in dead)
+
+    def fault_layout(self) -> dict:
+        """The degraded IO layout after applying `self.faults` under its
+        degradation mode — the single source of truth `to_params` and
+        `analytic._timing_view` both lower from.
+
+        Returns {n_ranks, dur, n_groups, group_of_rank, slotted,
+        ref_derate, ecc_every, survivors}: the *effective* rank count and
+        per-rank transfer durations (np.int64 (n_ranks,)), bus grouping,
+        the cascaded-SLR slotting flag, the per-rank JEDEC tREFI derating
+        vector, the re-read cadence (0 = off), and the surviving physical
+        layer indices.  With zero effective faults this is exactly the
+        clean layout for every degradation mode — bit-identity of the
+        fault-free path is a tested invariant.
+
+        Degradation semantics (faults.DegradeMode):
+        * RETIME   — the cascaded chain keeps its L-slot rotation with
+          dead slots idling (aggregate slotted bandwidth falls L'/L;
+          surviving rank r sits r re-bonded cut-through hops from the
+          IO); shared-bus MLR spreads the same beats over the survivors
+          at proportionally reduced IO frequency (ceil(beats*L/L')).
+        * REMAP    — dedicated-IO fallback where per-layer TSV groups
+          exist (SLR): each survivor owns a wider W/L' private group
+          (beats*L' cycles, no slotting); shared-bus organisations have
+          nothing to remap and degrade as under RETIME.
+        * COLLAPSE — baseline single-layer access: the bottom survivor
+          drives the full-width bus at F (beats*L cycles).
+        """
+        flt = self.faults
+        survivors = self.survivor_layers
+        Lp, L = len(survivors), self.layers
+        beats = self.request_beats_full_bus
+        slr = self.rank_org == RankOrg.SLR
+        per_layer_ranks = self.io_model == IOModel.BASELINE or slr
+
+        if Lp == L:                         # clean: the historical layout
+            R = self.n_ranks
+            dur = np.array([self.transfer_cycles(r) for r in range(R)],
+                           np.int64)
+            grouped = (self.io_model != IOModel.BASELINE and slr)
+            slotted = (self.io_model == IOModel.CASCADED and slr and R > 1)
+        elif flt.degrade == DegradeMode.COLLAPSE:
+            R = 1
+            dur = np.array([beats * L], np.int64)
+            grouped, slotted = False, False
+        elif not per_layer_ranks:           # MLR: one rank, shared bus
+            R = 1
+            grouped, slotted = False, False
+            if self.io_model == IOModel.BASELINE:
+                d = beats * L
+            else:                           # retimed chain over L' layers
+                d = -(-beats * L // Lp)
+            dur = np.array([d], np.int64)
+        elif self.io_model == IOModel.BASELINE:
+            R = Lp                          # shared full bus, fewer ranks
+            dur = np.full(R, beats * L, np.int64)
+            grouped, slotted = False, False
+        elif flt.degrade == DegradeMode.REMAP:
+            R = Lp                          # W/L' private groups at L*F
+            dur = np.full(R, beats * Lp, np.int64)
+            grouped, slotted = True, False
+        elif self.io_model == IOModel.DEDICATED:
+            R = Lp                          # survivors keep W/L groups
+            dur = np.full(R, beats * L, np.int64)
+            grouped, slotted = True, False
+        else:                               # RETIME cascaded SLR
+            R = Lp                          # L-rotation, dead slots idle
+            dur = np.array([(beats - 1) * L + 1 + r for r in range(R)],
+                           np.int64)
+            grouped, slotted = True, R > 1
+
+        group_of_rank = (np.arange(R, dtype=np.int32) if grouped
+                         else np.zeros(R, np.int32))
+        # JEDEC 2x/4x tREFI derating for weak-retention layers, mapped
+        # through the survivor renumbering; a single-rank layout derates
+        # when any of the layers it spans is weak.
+        weak = set(flt.weak_ranks) & set(survivors)
+        derate = np.ones(R, np.int32)
+        if weak:
+            if R == len(survivors):
+                for r, phys in enumerate(survivors[:R]):
+                    if phys in weak:
+                        derate[r] = flt.retention_derate
+            elif R == 1 and flt.degrade == DegradeMode.COLLAPSE \
+                    and Lp < L:
+                if survivors[0] in weak:
+                    derate[0] = flt.retention_derate
+            else:                           # one rank spanning the stack
+                derate[0] = flt.retention_derate
+        return {"n_ranks": R, "dur": dur,
+                "n_groups": R if grouped else 1,
+                "group_of_rank": group_of_rank, "slotted": slotted,
+                "ref_derate": derate, "ecc_every": flt.ecc_every,
+                "survivors": survivors}
 
     def layer_freq_mhz(self, layer: int) -> float:
         """Per-layer IO clock (§4.2.1).
@@ -292,24 +429,41 @@ class StackConfig:
         (`n_ranks_max`) and stacked into one vmapped batch.  Padded `dur` /
         `group_of_rank` entries are never referenced: trace ranks are taken
         mod `n_ranks`, and no valid queue entry maps to a padded bus group.
+
+        Faults are lowered *here*, Python-side, through `fault_layout`:
+        the degraded rank count, durations, grouping, slotting, per-rank
+        refresh derating and ECC cadence are all traced data in the same
+        padded shapes, so the fault x degradation cross-product (like the
+        policy cross-product) never adds a compile.  The padded rank axis
+        defaults to the *physical* rank count, so toggling faults on a
+        config never changes its static shapes either.
         """
-        R = self.n_ranks
-        Rm = R if n_ranks_max is None else n_ranks_max
+        lay = self.fault_layout()
+        R = lay["n_ranks"]
+        Rm = self.n_ranks if n_ranks_max is None else n_ranks_max
         if Rm < R:
             raise ValueError(f"n_ranks_max={Rm} < n_ranks={R}")
         dur = np.zeros(Rm, np.int32)
-        dur[:R] = [self.transfer_cycles(r) for r in range(R)]
+        dur[:R] = lay["dur"]
         # per-layer clock-gating dividers (ones unless GATED on dedicated
-        # SLR); padded ranks get 1 so padded dur stays untouched
+        # SLR), mapped through the survivor renumbering when each
+        # survivor is its own rank; padded ranks get 1 so padded dur
+        # stays untouched
         clk_div = np.ones(Rm, np.int32)
-        clk_div[:R] = self.clock_dividers()
+        div_full = self.clock_dividers()
+        if R == len(lay["survivors"]) and div_full.size == self.layers:
+            clk_div[:R] = div_full[np.array(lay["survivors"])]
+        else:
+            clk_div[:R] = div_full[:R]
         # bus groups: which ranks contend on the same bus resource
-        if self.io_model == IOModel.BASELINE or self.rank_org == RankOrg.MLR:
-            n_groups, group_of_rank = 1, np.zeros(Rm, np.int32)
+        n_groups = lay["n_groups"]
+        if n_groups == 1:
+            group_of_rank = np.zeros(Rm, np.int32)
         else:   # SLR dedicated (true groups) or cascaded (disjoint slots)
-            n_groups, group_of_rank = R, np.arange(Rm, dtype=np.int32)
-        slotted = (self.io_model == IOModel.CASCADED
-                   and self.rank_org == RankOrg.SLR and R > 1)
+            group_of_rank = np.arange(Rm, dtype=np.int32)
+        slotted = lay["slotted"]
+        ref_derate = np.ones(Rm, np.int32)
+        ref_derate[:R] = lay["ref_derate"]
         return {
             "t_rcd": np.int32(self.t_rcd),
             "t_rp": np.int32(self.t_rp),
@@ -339,6 +493,15 @@ class StackConfig:
             "post_sel": np.int32(int(self.policy.ref_postpone)),
             "clk_sel": np.int32(int(self.policy.layer_clock)),
             "clk_div": clk_div,
+            # fault axes (core/smla/faults.py) — traced like the policy
+            # selectors: per-rank JEDEC tREFI derating, the ECC re-read
+            # cadence (ECC_OFF = never), and the degradation-mode
+            # selector (provenance: surfaces in the metrics dict so
+            # sweep rows are self-describing)
+            "ref_derate": ref_derate,
+            "ecc_every": (np.int32(lay["ecc_every"]) if lay["ecc_every"]
+                          else ECC_OFF),
+            "degrade_sel": np.int32(int(self.faults.degrade)),
         }
 
     @property

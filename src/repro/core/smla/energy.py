@@ -83,15 +83,25 @@ class EnergyBreakdown:
 def energy_from_metrics(stack: StackConfig, metrics: dict,
                         n_wr: int | None = None,
                         pd_frac: float | None = None,
-                        sr_frac: float | None = None) -> EnergyBreakdown:
+                        sr_frac: float | None = None,
+                        price_refresh: bool = False) -> EnergyBreakdown:
     """EnergyBreakdown for one simulated cell's metrics dict (engine or
     sweep output): energy over the fixed-work makespan, with the measured
     bus utilisation splitting active- vs precharge-standby, the measured
     write count pricing E_WR vs E_RD, and the measured power-down /
     self-refresh residencies pricing the 0.24 mA power-down and the
-    deeper SR_MA retention state.  The explicit `n_wr` / `pd_frac` /
-    `sr_frac` arguments exist only to override the metrics (e.g. what-if
-    analyses); by default all come out of the simulation."""
+    deeper SR_MA retention state.  ECC re-reads (the fault axis'
+    transient-error pricing) are charged as extra reads — zero on a
+    clean stack, so the default decomposition is unchanged.  The
+    explicit `n_wr` / `pd_frac` / `sr_frac` arguments exist only to
+    override the metrics (e.g. what-if analyses); by default all come
+    out of the simulation.
+
+    `price_refresh=True` additionally prices the measured refresh
+    residency (`refresh_cycles`, which JEDEC tREFI derating of
+    weak-retention ranks multiplies) at active-standby current instead
+    of folding it into the background split — opt-in so every
+    historical figure keeps its decomposition."""
     act_frac = float(np.clip(np.asarray(metrics["bus_util"]), 0.0, 1.0))
     if n_wr is None:
         n_wr = int(np.asarray(metrics.get("n_wr", 0)))
@@ -100,39 +110,59 @@ def energy_from_metrics(stack: StackConfig, metrics: dict,
     if sr_frac is None:
         sr_frac = float(np.asarray(metrics.get("sr_frac", 0.0)))
     n_served = int(np.asarray(metrics["served"]).sum())
+    n_ecc = int(np.asarray(metrics.get("n_ecc_reread", 0)))
+    ref_frac = 0.0
+    if price_refresh:
+        mk_cycles = float(metrics["makespan_ns"]) / stack.unit_ns
+        r_eff = max(stack.fault_layout()["n_ranks"], 1)
+        ref_frac = (float(np.asarray(metrics.get("refresh_cycles", 0)))
+                    / max(mk_cycles * r_eff, 1.0))
     return stack_energy(stack, float(metrics["makespan_ns"]),
                         int(metrics["n_act"]),
-                        n_served - n_wr,
-                        act_frac, n_wr, pd_frac=pd_frac, sr_frac=sr_frac)
+                        n_served - n_wr + n_ecc,
+                        act_frac, n_wr, pd_frac=pd_frac, sr_frac=sr_frac,
+                        ref_frac=ref_frac)
 
 
 def stack_energy(stack: StackConfig, horizon_ns: float, n_act: int,
                  n_rd: int, active_frac: float, n_wr: int = 0,
                  pd_frac: float = 0.0, sr_frac: float = 0.0,
-                 vdd: float | None = None) -> EnergyBreakdown:
+                 vdd: float | None = None,
+                 ref_frac: float = 0.0) -> EnergyBreakdown:
     """Total stack energy over a simulated window.
 
     standby: per-layer clock-coupled current at that layer's frequency.
     `sr_frac` of the window (the engine's measured self-refresh rank
     residency) draws only the retention current SR_MA; `pd_frac` draws
-    the Table-1 power-down current; the remainder splits between active-
+    the Table-1 power-down current; `ref_frac` (opt-in, see
+    `energy_from_metrics(price_refresh=True)`) draws active-standby
+    while a refresh is in progress; the remainder splits between active-
     and precharge-standby by `active_frac` (measured bus utilisation,
     capped at the share not in a deep state).  ops: frequency-decoupled
     ACT/RD/WR energy — identical across IO models, as the paper observes
     (§8.4).
+
+    Fault awareness: a layer in `stack.faults.dead_layers` is physically
+    gone and draws nothing; a layer behind a stuck TSV group is alive —
+    its die keeps refreshing and drawing standby current even though its
+    data path is unusable (the cost of a stuck group over a dead die).
     """
     v = stack.vdd if vdd is None else vdd
     sr = float(np.clip(sr_frac, 0.0, 1.0))
     pd = min(float(np.clip(pd_frac, 0.0, 1.0)), 1.0 - sr)
-    act = min(float(np.clip(active_frac, 0.0, 1.0)), 1.0 - pd - sr)
-    pre = max(1.0 - sr - pd - act, 0.0)
+    ref = min(float(np.clip(ref_frac, 0.0, 1.0)), 1.0 - pd - sr)
+    act = min(float(np.clip(active_frac, 0.0, 1.0)), 1.0 - pd - sr - ref)
+    pre = max(1.0 - sr - pd - ref - act, 0.0)
+    dead = set(stack.faults.dead_layers)
     standby = 0.0
     for layer in range(stack.layers):
+        if layer in dead:
+            continue
         # gating-aware: under LayerClockPolicy.GATED a dedicated-SLR
         # layer's clock-coupled current is priced at its gated tier clock
         f = stack.effective_layer_freq_mhz(layer)
         i_ma = (sr * SR_MA + pd * PD_MA
-                + act * standby_current_ma(f, True)
+                + (act + ref) * standby_current_ma(f, True)
                 + pre * standby_current_ma(f, False))
         standby += i_ma * v * horizon_ns * 1e-3          # pJ -> nJ
     ops = (n_act * act_pre_energy_nj(stack.base_freq_mhz)

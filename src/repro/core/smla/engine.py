@@ -136,11 +136,19 @@ class SimOptions:
                tolerance).
     interpret  run the Pallas kernel in interpreter mode — required on
                CPU (CI) where Mosaic cannot lower; ignored by ``"scan"``.
+    validate   debug mode: wrap the compiled program in
+               ``jax.experimental.checkify`` NaN / negative-cycle guards
+               (both backends — the checks run on the kernel's outputs).
+               A violated guard raises ``checkify.JaxRuntimeError`` with
+               the failing metric named, instead of silently propagating
+               garbage into figures.  Off by default (one extra pass over
+               the outputs; results are bit-identical either way).
     """
     horizon: int
     chunk: int | None | str = AUTO
     backend: str = "scan"
     interpret: bool = False
+    validate: bool = False
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -149,6 +157,9 @@ class SimOptions:
                 or isinstance(self.chunk, (int, np.integer))):
             raise ValueError(f"chunk={self.chunk!r}: want int, None or "
                              f"{AUTO!r}")
+        if (isinstance(self.chunk, (int, np.integer))
+                and not isinstance(self.chunk, bool) and int(self.chunk) < 1):
+            raise ValueError(f"chunk={self.chunk!r}: want >= 1")
         if int(self.horizon) < 1:
             raise ValueError(f"horizon={self.horizon!r}: want >= 1")
 
@@ -459,6 +470,7 @@ def _stage_transfer(st, aux, t, ctx):
     qphase = jnp.where(qv & (qphase == 2) & (qready <= t), 3, qphase)
     slot_match = (t % ctx["L"]) == (qr % ctx["L"])
     n_grants, n_slot_grants = st["n_grants"], st["n_slot_grants"]
+    n_ecc = st["n_ecc_reread"]
     bus_cycles, wr_bus_cycles = st["bus_cycles"], st["wr_bus_cycles"]
     wr_extra = policies.write_recovery_extra(pol, ctx["t_rp"])
     for g in range(R):
@@ -474,7 +486,15 @@ def _stage_transfer(st, aux, t, ctx):
         score3 = jnp.where(cand3, -qarr, -BIG)
         p3 = jnp.argmax(score3)
         go = cand3[p3]
-        d = ctx["dur"][qr[p3]]
+        # transient-error pricing (faults.FaultConfig.ecc_rate): every
+        # ecc_every-th bus grant, when it is a read, detects an error
+        # and re-occupies its group for a second transfer (ECC
+        # re-read).  ecc_every = ECC_OFF (the clean default) never
+        # fires: grant counters stay far below 2**30.
+        reread = go & ~qwr[p3] \
+            & (n_grants % ctx["ecc_every"] == ctx["ecc_every"] - 1)
+        d = ctx["dur"][qr[p3]] + jnp.where(reread, ctx["dur"][qr[p3]], 0)
+        n_ecc = n_ecc + jnp.where(reread, 1, 0)
         go_wr = go & qwr[p3]
         grp_busy = grp_busy.at[g].set(jnp.where(go, t + d, grp_busy[g]))
         qphase = qphase.at[p3].set(jnp.where(go, 4, qphase[p3]))
@@ -496,7 +516,8 @@ def _stage_transfer(st, aux, t, ctx):
     st.update(qphase=qphase, qdone=qdone, bank_busy=bank_busy,
               grp_busy=grp_busy, grp_wr_until=grp_wr_until,
               bus_cycles=bus_cycles, wr_bus_cycles=wr_bus_cycles,
-              n_grants=n_grants, n_slot_grants=n_slot_grants)
+              n_grants=n_grants, n_slot_grants=n_slot_grants,
+              n_ecc_reread=n_ecc)
     return st, aux
 
 
@@ -615,6 +636,16 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
     refresh_en = t_refi > 0
     t_refi_eff, t_rfc_eff = policies.refresh_timings(pol, t_refi, t_rfc, B,
                                                      refresh_en)
+    # weak-retention derating (faults.FaultConfig.weak_ranks): JEDEC
+    # 2x/4x tREFI shortening per rank.  All-ones derate broadcasts the
+    # historical scalar interval to (R,) with identical values, so the
+    # clean path stays bit-identical; the refresh_en guard keeps a
+    # disabled refresh (t_refi == 0) disabled.
+    derate = params["ref_derate"]
+    t_refi_eff = jnp.where((derate > 1) & refresh_en,
+                           jnp.maximum(t_refi_eff // jnp.maximum(derate, 1),
+                                       1),
+                           t_refi_eff)
     wq_hi, wq_lo = policies.drain_watermarks(Q, n_cores, core.mshr)
     # DVFS-style per-layer clock gating: under LayerClockPolicy.GATED each
     # rank's transfer duration stretches by its traced divider (ones for
@@ -633,7 +664,7 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         "refresh_en": refresh_en,
         "t_refi_eff": t_refi_eff, "t_rfc_eff": t_rfc_eff,
         "dur": dur_eff, "group_of_rank": params["group_of_rank"],
-        "slotted": params["slotted"],
+        "slotted": params["slotted"], "ecc_every": params["ecc_every"],
         "real_rank": jnp.arange(R, dtype=jnp.int32) < params["n_ranks"],
         "pol": pol,
         "wq_hi": wq_hi, "wq_lo": wq_lo,
@@ -691,6 +722,7 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         sr_cycles=jnp.zeros((), i32), n_sr_exit=jnp.zeros((), i32),
         n_drain_bursts=jnp.zeros((), i32),
         n_grants=jnp.zeros((), i32), n_slot_grants=jnp.zeros((), i32),
+        n_ecc_reread=jnp.zeros((), i32),
     )
     # ---- chunked execution with early exit --------------------------------
     # Fixed-width scan chunks under a while loop: exit at the first chunk
@@ -771,6 +803,10 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         "n_drain_bursts": final["n_drain_bursts"],
         "n_grants": final["n_grants"],
         "n_slot_grants": final["n_slot_grants"],
+        # fault diagnostics: ECC re-reads granted, and the degradation-
+        # mode selector echoed back so sweep rows are self-describing
+        "n_ecc_reread": final["n_ecc_reread"],
+        "degrade_sel": params["degrade_sel"],
         "n_enqueued": final["c_next"].sum(),
         "n_outstanding": jnp.where(final["qv"], 1, 0).sum(),
         "bus_util": final["bus_cycles"] / jnp.maximum(
@@ -794,11 +830,12 @@ _COMPILE_COUNT = [0]
 
 #: params every trace/param dict must carry; used to default legacy inputs.
 _TIMING_DEFAULTS = ("t_wr", "t_wtr", "t_refi", "t_rfc", "t_pd", "t_sr",
-                    "t_xsr")
+                    "t_xsr", "ecc_every")
 
 #: timing keys whose legacy default is "never" (BIG), not "disabled" (0):
-#: an idleness threshold of 0 would mean *instant* power-down/self-refresh.
-_NEVER_DEFAULTS = ("t_pd", "t_sr")
+#: an idleness threshold of 0 would mean *instant* power-down/self-refresh
+#: (and an ECC cadence of 0 would divide by zero — BIG means no re-reads).
+_NEVER_DEFAULTS = ("t_pd", "t_sr", "ecc_every")
 
 
 def compile_count() -> int:
@@ -834,7 +871,8 @@ def _with_timing_defaults(params: dict) -> dict:
     missing = [k for k in _TIMING_DEFAULTS if k not in params]
     missing += [k for k in policies.SELECTOR_KEYS if k not in params]
     need_div = "clk_div" not in params
-    if not missing and not need_div:
+    need_derate = "ref_derate" not in params
+    if not missing and not need_div and not need_derate:
         return params
     p = dict(params)
     for k in missing:
@@ -844,7 +882,33 @@ def _with_timing_defaults(params: dict) -> dict:
         # dur-shaped, not t_cl-shaped: the clock-gating dividers multiply
         # the per-rank transfer durations; ones = ungated
         p["clk_div"] = jnp.ones(np.shape(p["dur"]), jnp.int32)
+    if need_derate:
+        # dur-shaped like clk_div: per-rank tREFI derating; ones = nominal
+        p["ref_derate"] = jnp.ones(np.shape(p["dur"]), jnp.int32)
     return p
+
+
+#: metrics SimOptions(validate=True) guards: every float must be finite,
+#: every cycle/event counter non-negative.  Applied to the program's
+#: *outputs*, so the same guards serve the scan pipeline and the Pallas
+#: kernel uniformly.
+_VALIDATE_FINITE = ("bandwidth_gbps", "ipc", "bus_util", "pd_frac",
+                    "sr_frac", "makespan_ns")
+_VALIDATE_NONNEG = ("makespan_ns", "served", "bus_cycles", "wr_bus_cycles",
+                    "refresh_cycles", "pd_cycles", "sr_cycles", "n_grants",
+                    "n_act", "n_wr", "n_ecc_reread", "ref_debt_end",
+                    "chunks_run")
+
+
+def _validate_metrics(out: dict) -> None:
+    """checkify NaN / negative-cycle guards over a metrics dict (batched
+    or single-cell: `jnp.all` reduces over whatever axes exist)."""
+    from jax.experimental import checkify
+    for k in _VALIDATE_FINITE:
+        checkify.check(jnp.all(jnp.isfinite(out[k])),
+                       f"validate: non-finite {k}")
+    for k in _VALIDATE_NONNEG:
+        checkify.check(jnp.all(out[k] >= 0), f"validate: negative {k}")
 
 
 @functools.lru_cache(maxsize=None)
@@ -854,8 +918,14 @@ def _compiled(options: SimOptions, core: CoreParams, banks: int,
 
     shapes_key pins (n_cells, n_cores, n_req_max, r_max); `options` (with
     the chunk already resolved — never AUTO) carries the remaining static
-    quantities (horizon, chunk, backend, interpret), so each cache miss
-    corresponds to exactly one XLA compilation of the returned function.
+    quantities (horizon, chunk, backend, interpret, validate), so each
+    cache miss corresponds to exactly one XLA compilation of the returned
+    function.  Under ``validate=True`` only the *output guards* are
+    transformed through `checkify` — the simulation itself (whose
+    batched `lax.while_loop` checkify cannot transform) runs untouched,
+    the checks consume its metrics dict inside the same jit, and the
+    wrapper re-raises any tripped guard on the host — still exactly one
+    compile per signature.
     """
     assert options.chunk != AUTO, "resolve AUTO before the compile cache"
     _COMPILE_COUNT[0] += 1
@@ -866,19 +936,38 @@ def _compiled(options: SimOptions, core: CoreParams, banks: int,
             core=core, banks=banks, chunk=options.chunk,
             interpret=options.interpret)
         if batched:
-            return jax.jit(raw)
+            base = raw
+        else:
+            def base(params, traces):
+                lift = functools.partial(jax.tree_util.tree_map,
+                                         lambda x: jnp.asarray(x)[None])
+                out = raw(lift(params), lift(traces))
+                return jax.tree_util.tree_map(lambda x: x[0], out)
+    else:
+        fn = functools.partial(_sim_core, horizon=options.horizon,
+                               core=core, banks=banks, chunk=options.chunk)
+        base = jax.vmap(fn) if batched else fn
+    if not options.validate:
+        return jax.jit(base)
+    from jax.experimental import checkify
 
-        def single(params, traces):
-            lift = functools.partial(jax.tree_util.tree_map,
-                                     lambda x: jnp.asarray(x)[None])
-            out = raw(lift(params), lift(traces))
-            return jax.tree_util.tree_map(lambda x: x[0], out)
-        return jax.jit(single)
-    fn = functools.partial(_sim_core, horizon=options.horizon, core=core,
-                           banks=banks, chunk=options.chunk)
-    if batched:
-        fn = jax.vmap(fn)
-    return jax.jit(fn)
+    def _checked(out):
+        _validate_metrics(out)
+        return out
+    check = checkify.checkify(_checked, errors=checkify.user_checks)
+
+    def guarded(params, traces):
+        # checkify wraps only the output guards (pure elementwise checks),
+        # never the simulation's while-loop, so it lowers on both backends
+        # batched or not
+        return check(base(params, traces))
+    cfn = jax.jit(guarded)
+
+    def run(params, traces):
+        err, out = cfn(params, traces)
+        err.throw()
+        return out
+    return run
 
 
 def batched_simulate(params: dict, traces: dict,

@@ -28,6 +28,16 @@ divide the block size is padded by replicating the last cell — a
 duplicate of a resident cell never extends its block's early-exit point
 — and the pad rows are sliced off the outputs.
 
+Fault axes need no kernel changes: the fault/degradation consequences
+are lowered to traced *data* in `StackConfig.to_params` (degraded rank
+counts, re-timed transfer durations, per-rank refresh derates, the ECC
+re-read cadence), and every param threads into the kernel through the
+same sorted-key iteration as the policy selectors — the fault x
+degradation cross-product reuses this kernel's one compiled executable.
+`SimOptions(validate=True)`'s checkify guards run on the *outputs*,
+outside the kernel body, so validation works identically on both
+backends without a Mosaic lowering for the check primitives.
+
 On CPU/GPU, Mosaic cannot lower this kernel: pass
 ``SimOptions(interpret=True)`` (the CI path) to run it through the
 Pallas interpreter — same semantics, executed as ordinary XLA ops, so

@@ -62,8 +62,13 @@ BIG = np.int32(2**30)
 #: `clk_sel` (DVFS-style per-layer clock gating) additionally carries its
 #: per-rank divider vector in the separate dur-shaped `clk_div` param —
 #: the selector alone decides whether the dividers apply.
+#: `degrade_sel` (fault degradation mode, core/smla/faults.py) rides
+#: here too: its layout consequences are lowered Python-side by
+#: `StackConfig.fault_layout`, the selector itself is carried traced for
+#: provenance (it surfaces in the metrics dict) and defaults to 0
+#: (RETIME — inert on a clean stack) like every other selector.
 SELECTOR_KEYS = ("sched_sel", "row_sel", "ref_sel", "drain_sel",
-                 "sr_sel", "post_sel", "clk_sel")
+                 "sr_sel", "post_sel", "clk_sel", "degrade_sel")
 
 #: JEDEC maximum number of postponed refresh commands per rank (the "8x
 #: postpone" of LPDDR/DDR4): the engine's per-rank debt counter is capped

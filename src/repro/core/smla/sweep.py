@@ -42,10 +42,23 @@ arrays (`SweepResult.scalars`) for machine-readable benchmark output,
 and per-bucket calibration metadata (`SweepResult.buckets`: analytic
 estimate vs measured makespan per cell) the figure benchmarks emit so
 estimate drift is visible in the perf trajectory.
+
+Long grids run crash-resiliently: transient device errors are retried
+with bounded exponential backoff, a bucket that still fails can be
+isolated into `SweepResult.failed_buckets` instead of aborting its
+siblings (``on_error="record"``), and ``journal=`` checkpoints each
+completed bucket to disk so a killed sweep resumes bit-identically
+(see `SweepSpec`).  The fault axis (`fault_cells`) crosses cells with
+`FaultConfig` scenarios exactly like the policy axis — traced data,
+zero extra compiles.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import os
+import time
 from typing import Sequence
 
 import jax
@@ -54,6 +67,7 @@ import numpy as np
 from repro.core.smla import engine
 from repro.core.smla.config import ControllerPolicy, StackConfig, paper_configs
 from repro.core.smla.engine import CoreParams, SimOptions
+from repro.core.smla.faults import FaultConfig
 from repro.core.smla.traces import (WorkloadSpec, core_traces, pad_traces,
                                     stack_traces)
 
@@ -65,7 +79,20 @@ SCALAR_METRICS = ("bandwidth_gbps", "n_act", "n_row_conflicts", "bus_util",
                   "ref_debt_end", "pd_cycles", "pd_frac", "sr_cycles",
                   "sr_frac", "n_sr_exit", "n_drain_bursts", "n_grants",
                   "n_slot_grants", "n_enqueued", "n_outstanding",
-                  "chunks_run")
+                  "chunks_run", "n_ecc_reread", "degrade_sel")
+
+#: substrings (matched against ``f"{type(e).__name__}: {e}"``) that mark a
+#: device/runtime error as *transient* — worth a bounded exponential-backoff
+#: retry before the bucket is declared failed.  The names follow the XLA /
+#: gRPC status vocabulary surfaced in jaxlib exception text.
+_TRANSIENT_MARKERS = ("RESOURCE_EXHAUSTED", "out of memory", "OOM",
+                      "UNAVAILABLE", "DEADLINE_EXCEEDED", "INTERNAL",
+                      "DATA_LOSS", "ABORTED")
+
+
+def _is_transient(exc: BaseException) -> bool:
+    text = f"{type(exc).__name__}: {exc}"
+    return any(m in text for m in _TRANSIENT_MARKERS)
 
 #: scan-chunk widths ``chunk="auto"`` picks from, per bucket: the smallest
 #: width >= est/AUTO_CHUNK_TARGET so a bucket runs ~AUTO_CHUNK_TARGET
@@ -111,7 +138,28 @@ class SweepSpec:
     shape group may use.  `policies` is the controller-policy grid axis:
     when set, every cell is swept once per policy (cell names gain a
     ``|tag`` suffix); the selectors are traced, so the axis multiplies
-    the grid without multiplying compiles."""
+    the grid without multiplying compiles.
+
+    Resilience (for long overnight grids):
+
+    * `max_retries` / `retry_base_s` — a bucket whose execution dies with
+      a *transient* device error (`_TRANSIENT_MARKERS`: OOM, UNAVAILABLE,
+      DEADLINE_EXCEEDED, ...) is retried up to `max_retries` times with
+      exponential backoff (`retry_base_s * 2**attempt` seconds).
+      Non-transient errors are never retried.
+    * `on_error="record"` — a bucket that still fails is *isolated*: its
+      cells land in `SweepResult.failed_buckets` (tags + error text) and
+      the sweep continues with the remaining buckets instead of aborting
+      hours of siblings.  The default `"raise"` keeps the historical
+      fail-fast behaviour.
+    * `journal` — a directory path enabling checkpoint/resume: each
+      completed bucket's metrics are written atomically to
+      ``{journal}/{sha1(key)}.npz`` keyed by the bucket's full execution
+      signature (cells, chunk, horizon, backend, banks, validate).  A
+      re-run with the same spec and journal loads finished buckets from
+      disk (bit-identical — npz round-trips the exact arrays) and only
+      executes the missing ones, so a killed sweep resumes where it
+      died."""
     cells: tuple[SweepCell, ...]
     horizon: int | None = None
     core: CoreParams = CoreParams()
@@ -120,6 +168,27 @@ class SweepSpec:
     max_buckets: int = 8
     policies: tuple[ControllerPolicy, ...] | None = None
     options: SimOptions | None = None
+    journal: str | None = None
+    max_retries: int = 2
+    retry_base_s: float = 0.05
+    on_error: str = "raise"
+
+    def __post_init__(self):
+        if not self.cells:
+            raise ValueError("SweepSpec.cells is empty — a sweep needs at "
+                             "least one grid cell")
+        if self.max_buckets < 1:
+            raise ValueError(f"SweepSpec.max_buckets must be >= 1, got "
+                             f"{self.max_buckets}")
+        if self.on_error not in ("raise", "record"):
+            raise ValueError(f"SweepSpec.on_error must be 'raise' or "
+                             f"'record', got {self.on_error!r}")
+        if self.max_retries < 0:
+            raise ValueError(f"SweepSpec.max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+        if self.retry_base_s < 0:
+            raise ValueError(f"SweepSpec.retry_base_s must be >= 0, got "
+                             f"{self.retry_base_s}")
 
     def resolved_options(self) -> SimOptions:
         """The one SimOptions this sweep runs under."""
@@ -147,6 +216,11 @@ class SweepResult:
     #: execution backend that produced these metrics ("scan" | "pallas"),
     #: carried so benchmark records are self-describing
     backend: str = "scan"
+    #: buckets that failed after retries under ``on_error="record"``:
+    #: {"cells": [tags], "error": "Type: text", "attempts": n}.  Failed
+    #: cells are excluded from `names`/`cells`, so `scalars()` stays
+    #: well-formed over the survivors.
+    failed_buckets: list[dict] = dataclasses.field(default_factory=list)
 
     def __getitem__(self, name: str) -> dict:
         return self.cells[self.names.index(name)]
@@ -190,6 +264,22 @@ def policy_cells(cells: Sequence[SweepCell],
         for c in cells:
             out.append(SweepCell(f"{c.name}|{pol.tag}",
                                  dataclasses.replace(c.stack, policy=pol),
+                                 c.traces))
+    return out
+
+
+def fault_cells(cells: Sequence[SweepCell],
+                faults: Sequence[FaultConfig]) -> list[SweepCell]:
+    """Cross `cells` with fault scenarios: each cell is replicated once
+    per FaultConfig (same traces — the workload does not change, only the
+    hardware's health does) and renamed ``{name}%{fault.tag}``.  Like the
+    policy axis, the fault axis is lowered to traced data in
+    `StackConfig.to_params`, so it never adds a compile."""
+    out = []
+    for fc in faults:
+        for c in cells:
+            out.append(SweepCell(f"{c.name}%{fc.tag}",
+                                 dataclasses.replace(c.stack, faults=fc),
                                  c.traces))
     return out
 
@@ -264,6 +354,56 @@ def _bucket_chunk(opts: SimOptions,
     return opts.chunk
 
 
+def _bucket_key(ordinal: int, names: Sequence[str], chunk_b, opts: SimOptions,
+                banks: int) -> str:
+    """Stable journal key for one bucket: sha1 of its full execution
+    signature.  Two runs of the same spec enumerate buckets identically,
+    so the key round-trips; any change to the grid, chunking, horizon,
+    backend or validation mode changes the key and invalidates the
+    journal entry rather than silently reusing stale metrics."""
+    payload = json.dumps({"ordinal": ordinal, "cells": list(names),
+                          "chunk": chunk_b, "horizon": opts.horizon,
+                          "backend": opts.backend, "banks": banks,
+                          "validate": opts.validate}, sort_keys=True)
+    return hashlib.sha1(payload.encode()).hexdigest()
+
+
+def _journal_load(journal: str, key: str) -> dict | None:
+    path = os.path.join(journal, key + ".npz")
+    if not os.path.exists(path):
+        return None
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def _journal_save(journal: str, key: str, out: dict) -> None:
+    """Atomic per-bucket checkpoint: write to a tmp file, fsync-free
+    os.replace into place — a sweep killed mid-write never leaves a
+    truncated entry behind."""
+    os.makedirs(journal, exist_ok=True)
+    path = os.path.join(journal, key + ".npz")
+    tmp = path + f".tmp.{os.getpid()}"
+    np.savez(tmp, **{k: np.asarray(v) for k, v in out.items()})
+    # np.savez appends .npz when missing; our tmp name has no extension
+    tmp_written = tmp if os.path.exists(tmp) else tmp + ".npz"
+    os.replace(tmp_written, path)
+
+
+def _run_with_retry(fn, max_retries: int, base_s: float) -> tuple[dict, int]:
+    """Call `fn` with bounded exponential-backoff retries on *transient*
+    errors only.  Returns (result, attempts); re-raises the last error
+    once retries are exhausted or immediately for non-transient ones."""
+    attempt = 0
+    while True:
+        try:
+            return fn(), attempt + 1
+        except Exception as exc:
+            attempt += 1
+            if attempt > max_retries or not _is_transient(exc):
+                raise
+            time.sleep(base_s * (2 ** (attempt - 1)))
+
+
 def _cell_sharding(n_dev: int):
     """NamedSharding that splits a stacked batch's leading cell axis
     across all visible devices (built through the launch.compat shims, so
@@ -282,7 +422,13 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
     barriered on a slow outlier, and sharded over the cell axis when
     multiple devices are visible.  Metrics are bit-identical to per-cell
     `engine.simulate` with the same effective chunk width; chunk width
-    itself only moves the `chunks_run` diagnostic."""
+    itself only moves the `chunks_run` diagnostic.
+
+    Resilience: transient device errors are retried with exponential
+    backoff; under ``spec.on_error="record"`` a bucket that still fails
+    is recorded in `SweepResult.failed_buckets` and its siblings keep
+    running; with ``spec.journal`` set, each completed bucket checkpoints
+    to disk and a re-run resumes bit-identically from the journal."""
     opts = spec.resolved_options()
     cells = (list(spec.cells) if spec.policies is None
              else policy_cells(spec.cells, spec.policies))
@@ -295,6 +441,9 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
     results: list[dict | None] = [None] * len(cells)
     chunks: list[int] = [0] * len(cells)
     bucket_meta: list[dict] = []
+    failed_buckets: list[dict] = []
+    failed_pos: set[int] = set()
+    b_ord = 0
     for (_, banks), idxs in order.items():
         group = [cells[i] for i in idxs]
         r_max = max(c.stack.n_ranks for c in group)
@@ -304,20 +453,45 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
         for bucket in buckets:
             chunk_b = _bucket_chunk(opts, [est[j] for j in bucket])
             batch = [group[j] for j in bucket]
-            plist = []
-            for c in batch:
-                p = c.stack.to_params(r_max)
-                p["n_req"] = np.int32(c.traces["inst"].shape[1])
-                plist.append(p)
-            params = {k: np.stack([p[k] for p in plist]) for k in plist[0]}
-            traces = stack_traces([pad_traces(c.traces, n_req_max)
-                                   for c in batch])
-            if sharding is not None:
-                params = jax.device_put(params, sharding)
-                traces = jax.device_put(traces, sharding)
-            out = engine.batched_simulate(params, traces,
-                                          opts.with_chunk(chunk_b),
-                                          spec.core, banks)
+            jkey = (_bucket_key(b_ord, [c.name for c in batch], chunk_b,
+                                opts, banks)
+                    if spec.journal is not None else None)
+            b_ord += 1
+            out = (None if jkey is None
+                   else _journal_load(spec.journal, jkey))
+            if out is None:
+                def execute():
+                    plist = []
+                    for c in batch:
+                        p = c.stack.to_params(r_max)
+                        p["n_req"] = np.int32(c.traces["inst"].shape[1])
+                        plist.append(p)
+                    params = {k: np.stack([p[k] for p in plist])
+                              for k in plist[0]}
+                    traces = stack_traces([pad_traces(c.traces, n_req_max)
+                                           for c in batch])
+                    if sharding is not None:
+                        params = jax.device_put(params, sharding)
+                        traces = jax.device_put(traces, sharding)
+                    return engine.batched_simulate(
+                        params, traces, opts.with_chunk(chunk_b),
+                        spec.core, banks)
+                try:
+                    out, attempts = _run_with_retry(
+                        execute, spec.max_retries, spec.retry_base_s)
+                except Exception as exc:
+                    if spec.on_error != "record":
+                        raise
+                    tags = list(dict.fromkeys(c.name for c in batch))
+                    failed_buckets.append({
+                        "cells": tags,
+                        "error": f"{type(exc).__name__}: {exc}",
+                        "attempts": (spec.max_retries + 1
+                                     if _is_transient(exc) else 1)})
+                    failed_pos.update(idxs[j] for j in bucket)
+                    continue
+                if jkey is not None:
+                    _journal_save(spec.journal, jkey, out)
             # duplicate pad entries land on the same original index with
             # bit-identical values — assigning them again is harmless.
             meta = {"cells": [], "chunk": engine.effective_chunk(
@@ -335,10 +509,13 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
                 meta["est_cycles"].append(float(est[j]))
                 meta["measured_cycles"].append(
                     float(np.asarray(out["makespan_ns"])[j_pos])
-                    / float(plist[j_pos]["unit_ns"]))
+                    / float(group[j].stack.unit_ns))
             meta["est_max"] = max(meta["est_cycles"])
             meta["measured_max"] = max(meta["measured_cycles"])
             bucket_meta.append(meta)
-    return SweepResult(names=[c.name for c in cells],
-                       cells=results, chunks=chunks, buckets=bucket_meta,
-                       backend=opts.backend)
+    keep = [i for i in range(len(cells)) if i not in failed_pos]
+    return SweepResult(names=[cells[i].name for i in keep],
+                       cells=[results[i] for i in keep],
+                       chunks=[chunks[i] for i in keep],
+                       buckets=bucket_meta, backend=opts.backend,
+                       failed_buckets=failed_buckets)

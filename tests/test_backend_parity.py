@@ -145,6 +145,42 @@ def test_pallas_sweep_matches_scan_simulate_policy_grid():
         "pallas sweep diverged from scan simulate():\n" + "\n".join(errors)
 
 
+def test_pallas_matches_scan_on_fault_grid():
+    """Backend parity across the fault x degradation axes: the fault
+    consequences are traced data (re-timed durations, degraded rank
+    counts, refresh derates, ECC cadence), so the SAME kernel must
+    reproduce the scan backend on every degraded layout — including the
+    new `n_ecc_reread` counter, which is integer and therefore exact."""
+    from repro.core.smla.faults import DegradeMode, FaultConfig
+    import dataclasses
+    w = WorkloadSpec("mix.1", 18.0, 0.6, write_frac=0.2)
+    base = [sweep.make_cell(cname, sc, [w, w], N_REQ, seed=SEED)
+            for cname, sc in paper_configs(4).items()
+            if cname in ("cascaded_slr", "cascaded_mlr", "dedicated_slr")]
+    base = [dataclasses.replace(
+        c, stack=dataclasses.replace(c.stack, t_refi_ns=1200.0))
+        for c in base]
+    faults = (FaultConfig(),
+              FaultConfig(dead_layers=(3,)),
+              FaultConfig(dead_layers=(2, 3), degrade=DegradeMode.REMAP),
+              FaultConfig(dead_layers=(3,), degrade=DegradeMode.COLLAPSE),
+              FaultConfig(weak_ranks=(0,), retention_derate=4,
+                          ecc_rate=0.2))
+    cells = sweep.fault_cells(base, faults)
+    res = sweep.run_sweep(sweep.SweepSpec(
+        tuple(cells),
+        options=SimOptions(horizon=HORIZON, backend="pallas",
+                           interpret=not jax_backend_is_tpu())))
+    errors = []
+    for cell in cells:
+        ref = simulate(cell.stack, cell.traces, SimOptions(horizon=HORIZON))
+        errors += _diff_metrics(cell.name, res[cell.name], ref,
+                                skip=("chunks_run",))
+    assert not errors, \
+        "pallas fault grid diverged from scan simulate():\n" \
+        + "\n".join(errors)
+
+
 def test_pallas_single_cell_matches_scan():
     """Unbatched path: `simulate()` itself under both backends, equal
     chunking — every metric including `chunks_run` must agree."""

@@ -1,0 +1,202 @@
+"""Crash-resilient sweep runner: bucket isolation, transient retry,
+journal checkpoint/resume, and spec validation.
+
+`run_sweep` resolves `engine.batched_simulate` at call time, so every
+test injects failures by monkeypatching the engine module — the sweep
+machinery under test is untouched.  All grids reuse one shape group's
+compiled executable across the module.
+"""
+import numpy as np
+import pytest
+
+from repro.core.smla import engine, sweep
+from repro.core.smla.engine import SimOptions
+from repro.core.smla.traces import WorkloadSpec
+
+HORIZON = 3_000
+N_REQ = 30
+STREAM = WorkloadSpec("stream.t", 50.0, 0.85, write_frac=1 / 3)
+
+
+def _cells(n_layers=(2, 4)):
+    """10 cells (5 IO models x len(n_layers)), one shape group."""
+    return tuple(sweep.paper_grid([("s", [STREAM, STREAM], 3)],
+                                  layers=n_layers, n_req=N_REQ))
+
+
+def _spec(cells, **kw):
+    return sweep.SweepSpec(tuple(cells),
+                           options=SimOptions(horizon=HORIZON), **kw)
+
+
+def _assert_same_cells(got: sweep.SweepResult, want: sweep.SweepResult):
+    assert got.names == want.names
+    for name, g, w in zip(got.names, got.cells, want.cells):
+        for k in g:
+            assert np.array_equal(np.asarray(g[k]), np.asarray(w[k])), \
+                f"{name}:{k}"
+
+
+def test_failing_bucket_is_isolated(monkeypatch):
+    """One poisoned bucket lands in failed_buckets; its siblings complete
+    with bit-identical metrics and scalars() stays well-formed."""
+    cells = _cells()
+    ref = sweep.run_sweep(_spec(cells))
+    real = engine.batched_simulate
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise ValueError("injected deterministic failure")
+        return real(*a, **kw)
+    monkeypatch.setattr(engine, "batched_simulate", flaky)
+    res = sweep.run_sweep(_spec(cells, on_error="record", retry_base_s=0.0))
+    assert len(res.failed_buckets) == 1
+    fb = res.failed_buckets[0]
+    assert "injected deterministic failure" in fb["error"]
+    assert fb["attempts"] == 1                    # non-transient: no retry
+    assert set(fb["cells"]) | set(res.names) == {c.name for c in cells}
+    assert set(fb["cells"]).isdisjoint(res.names)
+    # survivors are bit-identical to the uninterrupted sweep
+    for name, m in zip(res.names, res.cells):
+        w = ref[name]
+        for k in m:
+            assert np.array_equal(np.asarray(m[k]), np.asarray(w[k])), \
+                f"{name}:{k}"
+    s = res.scalars()
+    assert len(s["bandwidth_gbps"]) == len(res.names)
+
+
+def test_default_on_error_raises(monkeypatch):
+    def boom(*a, **kw):
+        raise ValueError("injected deterministic failure")
+    monkeypatch.setattr(engine, "batched_simulate", boom)
+    with pytest.raises(ValueError, match="injected"):
+        sweep.run_sweep(_spec(_cells()))
+
+
+def test_transient_error_retried_until_success(monkeypatch):
+    cells = _cells()[:2]
+    ref = sweep.run_sweep(_spec(cells))
+    real = engine.batched_simulate
+    calls = {"n": 0}
+
+    def transient_twice(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise RuntimeError(
+                "RESOURCE_EXHAUSTED: out of memory allocating 1KiB")
+        return real(*a, **kw)
+    monkeypatch.setattr(engine, "batched_simulate", transient_twice)
+    res = sweep.run_sweep(_spec(cells, retry_base_s=0.0))
+    assert not res.failed_buckets
+    _assert_same_cells(res, ref)
+
+
+def test_transient_retries_are_bounded(monkeypatch):
+    calls = {"n": 0}
+
+    def always_transient(*a, **kw):
+        calls["n"] += 1
+        raise RuntimeError("UNAVAILABLE: device lost")
+    monkeypatch.setattr(engine, "batched_simulate", always_transient)
+    cells = _cells()[:2]
+    with pytest.raises(RuntimeError, match="UNAVAILABLE"):
+        sweep.run_sweep(_spec(cells, max_retries=2, retry_base_s=0.0,
+                              max_buckets=1))
+    assert calls["n"] == 3                        # 1 try + 2 retries
+
+
+def test_non_transient_error_not_retried(monkeypatch):
+    calls = {"n": 0}
+
+    def always_broken(*a, **kw):
+        calls["n"] += 1
+        raise ValueError("shape mismatch")
+    monkeypatch.setattr(engine, "batched_simulate", always_broken)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        sweep.run_sweep(_spec(_cells()[:2], max_retries=5,
+                              retry_base_s=0.0, max_buckets=1))
+    assert calls["n"] == 1
+
+
+def test_journal_kill_and_resume_bit_identical(tmp_path, monkeypatch):
+    """A sweep killed mid-run resumes from its journal: finished buckets
+    load from disk (no engine calls), the rest execute, and the final
+    result is bit-identical to an uninterrupted sweep."""
+    cells = _cells()
+    ref = sweep.run_sweep(_spec(cells))
+    jd = str(tmp_path / "journal")
+    real = engine.batched_simulate
+    calls = {"n": 0}
+
+    def die_after_two(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] > 2:
+            raise KeyboardInterrupt("killed")
+        return real(*a, **kw)
+    monkeypatch.setattr(engine, "batched_simulate", die_after_two)
+    with pytest.raises(KeyboardInterrupt):
+        sweep.run_sweep(_spec(cells, journal=jd))
+    import os
+    n_journaled = len(os.listdir(jd))
+    assert n_journaled == 2
+
+    calls2 = {"n": 0}
+
+    def counting(*a, **kw):
+        calls2["n"] += 1
+        return real(*a, **kw)
+    monkeypatch.setattr(engine, "batched_simulate", counting)
+    res = sweep.run_sweep(_spec(cells, journal=jd))
+    assert calls2["n"] == len(res.buckets) - n_journaled
+    _assert_same_cells(res, ref)
+
+
+def test_fully_journaled_rerun_runs_nothing(tmp_path, monkeypatch):
+    cells = _cells()
+    jd = str(tmp_path / "journal")
+    res1 = sweep.run_sweep(_spec(cells, journal=jd))
+
+    def forbidden(*a, **kw):
+        raise AssertionError("engine must not run on a full journal")
+    monkeypatch.setattr(engine, "batched_simulate", forbidden)
+    res2 = sweep.run_sweep(_spec(cells, journal=jd))
+    _assert_same_cells(res2, res1)
+    assert res2.buckets[0]["measured_max"] == res1.buckets[0]["measured_max"]
+
+
+def test_journal_keys_invalidate_on_spec_change(tmp_path):
+    """A different horizon must not reuse journal entries."""
+    cells = _cells()[:2]
+    jd = str(tmp_path / "journal")
+    sweep.run_sweep(sweep.SweepSpec(tuple(cells), journal=jd,
+                                    options=SimOptions(horizon=HORIZON)))
+    import os
+    before = set(os.listdir(jd))
+    sweep.run_sweep(sweep.SweepSpec(tuple(cells), journal=jd,
+                                    options=SimOptions(horizon=HORIZON + 64)))
+    assert set(os.listdir(jd)) > before           # new keys, old kept
+
+
+def test_validate_mode_sweep_bit_identical():
+    cells = _cells()[:4]
+    ref = sweep.run_sweep(_spec(cells))
+    res = sweep.run_sweep(sweep.SweepSpec(
+        tuple(cells), options=SimOptions(horizon=HORIZON, validate=True)))
+    _assert_same_cells(res, ref)
+
+
+def test_spec_validation():
+    cells = _cells()[:1]
+    with pytest.raises(ValueError, match="cells"):
+        sweep.SweepSpec((), horizon=HORIZON)
+    with pytest.raises(ValueError, match="max_buckets"):
+        _spec(cells, max_buckets=0)
+    with pytest.raises(ValueError, match="on_error"):
+        _spec(cells, on_error="ignore")
+    with pytest.raises(ValueError, match="max_retries"):
+        _spec(cells, max_retries=-1)
+    with pytest.raises(ValueError, match="retry_base_s"):
+        _spec(cells, retry_base_s=-0.5)
