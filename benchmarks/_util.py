@@ -31,6 +31,29 @@ def scaled(full: int, smoke: int) -> int:
     return smoke if smoke_mode() else full
 
 
+PROGRESS_ENV = "SMLA_PROGRESS"
+
+
+def progress_printer(label: str, every: int = 1, force: bool = False):
+    """An `on_bucket` callback for `SweepSpec` that prints per-bucket
+    progress (`[label] bucket done/total wall cells/s`), so long sweeps
+    launched through `benchmarks/run.py` are observable instead of
+    silent for hours.  Enabled by `run.py --progress` (sets
+    SMLA_PROGRESS=1) or `force=True`; returns None when disabled —
+    `SweepSpec(on_bucket=None)` is the no-op default, so callers can
+    pass the result through unconditionally."""
+    if not force and os.environ.get(PROGRESS_ENV, "") in ("", "0"):
+        return None
+
+    def on_bucket(done: int, total: int, wall_s: float,
+                  cells_per_s: float) -> None:
+        if done % every and done != total:
+            return
+        print(f"[{label}] bucket {done}/{total}  {wall_s:7.1f}s  "
+              f"{cells_per_s:8.1f} cells/s", flush=True)
+    return on_bucket
+
+
 def _jsonable(x: Any) -> Any:
     if isinstance(x, dict):
         return {str(k): _jsonable(v) for k, v in x.items()}
@@ -73,6 +96,8 @@ def perf_block(wall_s: float, res, horizon: int) -> dict:
     return {
         "wall_s": round(wall_s, 3),
         "cells_per_s": round(len(chunks) / wall, 3),
+        "n_buckets": len(res.buckets),
+        "buckets_per_s": round(len(res.buckets) / wall, 3),
         "sim_fast_cycles": sim_cycles,
         "sim_fast_cycles_per_s": round(sim_cycles / wall, 1),
         "horizon": horizon,

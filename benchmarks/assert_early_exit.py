@@ -28,6 +28,41 @@ from benchmarks._util import (BENCH_JSON_DEFAULT, BENCH_JSON_ENV,
 GATED_FIGURES = ("fig11", "fig_policy", "fig_refresh", "fig_fault",
                  "fig_serve")
 
+#: minimum stream_warm/sync cells_per_s ratio the fig_scale smoke grid
+#: must reach on its best row (the streaming pipeline + persistent
+#: compile cache vs the legacy cold synchronous runner — see
+#: benchmarks/paper_fig_scale.py for the methodology)
+STREAM_RATIO_FLOOR = 1.3
+#: minimum fraction of full-horizon device work successive halving must
+#: avoid on the fig_scale prune grid
+PRUNE_SAVED_FLOOR = 0.5
+
+
+def check_fig_scale(data: dict) -> str | None:
+    """None on success, else the failure message.  Gates the streaming
+    engine's committed throughput trajectory: the pipeline must actually
+    beat the legacy synchronous runner, and pruning must actually save
+    work — a regression that silently serialises the pipeline (producer
+    starvation, harvest barrier) or stops pruning from cutting rounds
+    shows up here while bit-identity tests still pass."""
+    fig = data.get("fig_scale")
+    if not fig or not fig.get("rows"):
+        return "fig_scale: no rows emitted"
+    best = max(float(r.get("ratio", 0.0)) for r in fig["rows"])
+    if best < STREAM_RATIO_FLOOR:
+        return (f"fig_scale: best streaming/sync cells_per_s ratio {best}"
+                f" < {STREAM_RATIO_FLOOR} — the streaming pipeline is not "
+                f"beating the synchronous runner")
+    saved = float(fig.get("prune", {}).get("saved_frac", 0.0))
+    if saved < PRUNE_SAVED_FLOOR:
+        return (f"fig_scale: successive halving saved {saved:.0%} "
+                f"< {PRUNE_SAVED_FLOOR:.0%} of full-horizon work")
+    print(f"assert_early_exit: fig_scale OK — streaming {best:.2f}x sync "
+          f"(floor {STREAM_RATIO_FLOOR}x), pruning saved {saved:.0%} of "
+          f"full-horizon work on "
+          f"{fig['prune'].get('n_cells', '?')} cells")
+    return None
+
 
 def check_figure(name: str, data: dict) -> str | None:
     """None on success, else the failure message."""
@@ -53,6 +88,9 @@ def main() -> int:
         data = json.load(f)
     failures = [msg for msg in (check_figure(name, data)
                                 for name in GATED_FIGURES) if msg]
+    msg = check_fig_scale(data)
+    if msg:
+        failures.append(msg)
     for msg in failures:
         print(f"assert_early_exit: {msg} ({path})", file=sys.stderr)
     return 1 if failures else 0

@@ -25,6 +25,7 @@ BENCHES = [
     "benchmarks.paper_fig_refresh",   # refresh-management / deep power states
     "benchmarks.paper_fig_fault",     # fault injection / graceful degradation
     "benchmarks.paper_fig_serve",     # serve<->sim loop: captured LM traffic
+    "benchmarks.paper_fig_scale",     # sweep-engine scaling: streaming/prune
     "benchmarks.collective_schedules",# cascaded vs dedicated cross-pod sync
     "benchmarks.smla_pipe_bench",     # SMLA pipeline kernel
     "benchmarks.serve_policies",      # MLR vs SLR serving placement
@@ -38,11 +39,16 @@ def main(argv=None) -> int:
                     help="tiny horizons/sizes for CI (sets SMLA_SMOKE=1)")
     ap.add_argument("--only", nargs="*", metavar="MOD",
                     help="run only these modules (suffix match)")
+    ap.add_argument("--progress", action="store_true",
+                    help="per-bucket sweep progress lines (sets "
+                         "SMLA_PROGRESS=1; see _util.progress_printer)")
     args = ap.parse_args(argv)
 
     env = dict(os.environ)
     if args.smoke:
         env["SMLA_SMOKE"] = "1"
+    if args.progress:
+        env["SMLA_PROGRESS"] = "1"
     # make `-m benchmarks.X` (and repro, via src/) work from any cwd
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = os.pathsep.join(
@@ -60,14 +66,17 @@ def main(argv=None) -> int:
     for mod in benches:
         print(f"\n===== {mod} =====", flush=True)
         t0 = time.time()
-        r = subprocess.run([sys.executable, "-m", mod], capture_output=True,
+        # --progress streams the child (per-bucket lines land live);
+        # otherwise output is captured and replayed on completion
+        r = subprocess.run([sys.executable, "-m", mod],
+                           capture_output=not args.progress,
                            text=True, env=env)
         dt = time.time() - t0
-        sys.stdout.write(r.stdout)
+        sys.stdout.write(r.stdout or "")
         if r.returncode != 0:
             failed.append((mod, r.returncode))
             sys.stdout.write(f"[FAILED rc={r.returncode}]\n")
-            sys.stdout.write(r.stderr[-2000:] + "\n")
+            sys.stdout.write((r.stderr or "")[-2000:] + "\n")
         print(f"[{mod}: {dt:.1f}s]", flush=True)
     # per-figure failure summary: every module always runs (a broken
     # figure never shadows its siblings), and the tail of the log names

@@ -134,6 +134,15 @@ def estimate_service_cycles(stack: StackConfig, traces: dict,
             + lat + dur_max + sr_cost) * refresh
 
 
+def estimates_for_cells(cells: Sequence["sweep_mod.SweepCell"],
+                        core: CoreParams = CoreParams()) -> np.ndarray:
+    """`estimate_service_cycles` vectorised over a cell list — the sweep's
+    bucket planner and the successive-halving seed round
+    (`sweep.PruneSpec.seed_from_estimate`) both rank cells by this."""
+    return np.array([estimate_service_cycles(c.stack, c.traces, core)
+                     for c in cells], dtype=float)
+
+
 def default_horizon(cells: Sequence["sweep_mod.SweepCell"],
                     core: CoreParams = CoreParams(),
                     margin: float = 1.25) -> int:

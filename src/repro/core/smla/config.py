@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import itertools
 
 import numpy as np
 
@@ -131,6 +132,34 @@ class ControllerPolicy:
         if self.layer_clock == LayerClockPolicy.GATED:
             parts.append("clkgate")
         return "-".join(parts)
+
+    @classmethod
+    def grid(cls, **pins) -> list["ControllerPolicy"]:
+        """The full controller cross-product — the policy-search axis for
+        large sweeps (2 schedulers x 2 row policies x 2 refresh
+        granularities x 3 drain policies x 2 self-refresh x 2 postpone x
+        2 layer clocks = 192 policies; every selector is traced, so the
+        whole axis reuses one compile per shape group).  Keyword pins fix
+        an axis to one value or a subset, shrinking the grid:
+        ``grid(row=RowPolicy.OPEN_PAGE, write_drain=[WriteDrainPolicy.
+        INLINE, WriteDrainPolicy.OPPORTUNISTIC])``.  Enumeration order is
+        deterministic (itertools.product over field declaration order),
+        so derived cell names round-trip across runs — the sweep
+        journal's keys depend on it."""
+        fields = dataclasses.fields(cls)
+        axes = []
+        for f in fields:
+            if f.name in pins:
+                v = pins.pop(f.name)
+                axes.append(list(v) if isinstance(v, (list, tuple))
+                            else [v])
+            else:
+                axes.append(list(type(f.default)))
+        if pins:
+            raise ValueError(f"unknown policy axes: {sorted(pins)}; "
+                             f"valid: {[f.name for f in fields]}")
+        return [cls(**dict(zip((f.name for f in fields), combo)))
+                for combo in itertools.product(*axes)]
 
 
 @dataclasses.dataclass(frozen=True)

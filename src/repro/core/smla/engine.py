@@ -85,6 +85,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import warnings
 
 import jax
@@ -143,16 +144,30 @@ class SimOptions:
                the failing metric named, instead of silently propagating
                garbage into figures.  Off by default (one extra pass over
                the outputs; results are bit-identical either way).
+    compile_cache_dir
+               directory for JAX's *persistent* compilation cache.  When
+               set, every entry point applies it before compiling, so the
+               XLA executables behind each shape group survive the
+               process: a journal resume (or any re-run of the same
+               grid) deserialises the compiled program instead of paying
+               the multi-second XLA compile again.  ``None`` (default)
+               leaves the process-global cache configuration untouched.
+               Results are bit-identical with or without the cache.
     """
     horizon: int
     chunk: int | None | str = AUTO
     backend: str = "scan"
     interpret: bool = False
     validate: bool = False
+    compile_cache_dir: str | None = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(f"backend={self.backend!r} not in {BACKENDS}")
+        if not (self.compile_cache_dir is None
+                or isinstance(self.compile_cache_dir, str)):
+            raise ValueError(f"compile_cache_dir="
+                             f"{self.compile_cache_dir!r}: want str or None")
         if not (self.chunk is None or self.chunk == AUTO
                 or isinstance(self.chunk, (int, np.integer))):
             raise ValueError(f"chunk={self.chunk!r}: want int, None or "
@@ -201,6 +216,30 @@ def _check_backend(options: SimOptions) -> None:
             "backend='pallas' compiles through Mosaic, which needs a TPU; "
             "on CPU/GPU pass SimOptions(..., interpret=True) to run the "
             "kernel in interpreter mode (same semantics, no fusion)")
+
+
+#: last compile_cache_dir applied to the process-global jax config — the
+#: applier is idempotent so hot sweep loops don't re-touch jax.config.
+_CACHE_DIR_APPLIED = [None]
+
+
+def _apply_compile_cache(cache_dir: str | None) -> None:
+    """Point JAX's persistent compilation cache at `cache_dir`.
+
+    The thresholds are dropped to "cache everything" (min compile time 0,
+    no minimum entry size): the sweep's executables are few and large, and
+    a journal resume that recompiles them from scratch wastes more wall
+    time than the grid itself on small-to-medium grids.  The jax config is
+    process-global; this helper only touches it when the directory
+    actually changes, and `None` never un-sets a previously applied one
+    (entry points pass whatever their SimOptions carries)."""
+    if cache_dir is None or _CACHE_DIR_APPLIED[0] == cache_dir:
+        return
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    _CACHE_DIR_APPLIED[0] = cache_dir
 
 
 def effective_chunk(horizon: int, chunk: int | None) -> int:
@@ -913,7 +952,7 @@ def _validate_metrics(out: dict) -> None:
 
 @functools.lru_cache(maxsize=None)
 def _compiled(options: SimOptions, core: CoreParams, banks: int,
-              shapes_key: tuple, batched: bool):
+              shapes_key: tuple, batched: bool, shard: int = 0):
     """One jitted executable per static signature.
 
     shapes_key pins (n_cells, n_cores, n_req_max, r_max); `options` (with
@@ -926,8 +965,25 @@ def _compiled(options: SimOptions, core: CoreParams, banks: int,
     the checks consume its metrics dict inside the same jit, and the
     wrapper re-raises any tripped guard on the host — still exactly one
     compile per signature.
+
+    ``shard > 1`` selects the *reduce-tree cond* multi-device path: the
+    vmapped pipeline is wrapped in a fully-manual ``shard_map`` over the
+    cell axis, so each of the first `shard` devices runs its own chunked
+    ``while_loop`` whose early-exit cond reduces only over its local cell
+    shard — no cross-device all-reduce per chunk, and a device whose
+    shard finishes early stops issuing chunks instead of spinning until
+    the globally slowest cell exits.  Metrics (including ``chunks_run``,
+    which becomes per-shard) stay bit-identical to the single-device
+    path because each cell still freezes at its own exit point.  The
+    stacked cell axis must be divisible by `shard` (``sweep.run_sweep``
+    rounds bucket sizes up to a device multiple).
     """
     assert options.chunk != AUTO, "resolve AUTO before the compile cache"
+    if shard > 1 and options.backend != "scan":
+        raise ValueError(
+            f"local-cond cell sharding (shard={shard}) is only available "
+            f"on the scan backend; backend={options.backend!r} shards "
+            f"through the global-cond NamedSharding path instead")
     _COMPILE_COUNT[0] += 1
     if options.backend == "pallas":
         from repro.core.smla import pallas_engine   # lazy: imports us back
@@ -947,6 +1003,17 @@ def _compiled(options: SimOptions, core: CoreParams, banks: int,
         fn = functools.partial(_sim_core, horizon=options.horizon,
                                core=core, banks=banks, chunk=options.chunk)
         base = jax.vmap(fn) if batched else fn
+        if shard > 1:
+            from repro.launch import compat     # lazy: heavier import
+            mesh = compat.make_mesh((shard,), ("cells",),
+                                    devices=np.array(jax.devices()[:shard]))
+            pspec = jax.sharding.PartitionSpec("cells")
+            # check_vma=False (check_rep on 0.4.x): the replication checker
+            # has no rule for while_loop; manual sharding is still valid —
+            # every output carries the partitioned cell axis.
+            base = compat.shard_map(base, mesh=mesh,
+                                    in_specs=(pspec, pspec),
+                                    out_specs=pspec, check_vma=False)
     if not options.validate:
         return jax.jit(base)
     from jax.experimental import checkify
@@ -972,20 +1039,29 @@ def _compiled(options: SimOptions, core: CoreParams, banks: int,
 
 def batched_simulate(params: dict, traces: dict,
                      options: SimOptions | int, core: CoreParams,
-                     banks: int, *, chunk=_UNSET) -> dict:
+                     banks: int, *, chunk=_UNSET,
+                     local_cond_devices: int = 0) -> dict:
     """Run a stacked batch of cells: every leaf has a leading cell axis.
 
     `options` is the execution surface (`SimOptions`); passing an int
     horizon (+ the legacy ``chunk=`` kwarg) still works one release, with
     a DeprecationWarning.  Inputs may carry a per-device sharding over
     the cell axis (see ``sweep.run_sweep``); the jitted program then
-    partitions along it."""
+    partitions along it.  ``local_cond_devices=n > 1`` instead compiles
+    the reduce-tree cond path: a fully-manual shard_map over the first
+    `n` devices where each device's while_loop exits on its *local*
+    shard (scan backend only; n_cells must be divisible by n)."""
     options = _coerce_options(options, chunk, "batched_simulate").resolved()
     _check_backend(options)
+    _apply_compile_cache(options.compile_cache_dir)
+    shard = int(local_cond_devices) if int(local_cond_devices) > 1 else 0
     n_cells, n_cores, n_req_max = traces["inst"].shape
+    if shard and n_cells % shard:
+        raise ValueError(f"local_cond_devices={shard}: n_cells={n_cells} "
+                         f"must be a device multiple")
     r_max = params["dur"].shape[1]
     fn = _compiled(options, core, banks,
-                   (n_cells, n_cores, n_req_max, r_max), True)
+                   (n_cells, n_cores, n_req_max, r_max), True, shard)
     return fn(_with_timing_defaults(params), _with_wr(traces))
 
 
@@ -997,6 +1073,7 @@ def simulate(stack: StackConfig, traces: dict, options: SimOptions | int,
     Returns metrics dict of scalars / per-core arrays (all jnp)."""
     options = _coerce_options(options, chunk, "simulate").resolved()
     _check_backend(options)
+    _apply_compile_cache(options.compile_cache_dir)
     n_cores, n_req = traces["inst"].shape
     params = stack.to_params()
     params["n_req"] = np.int32(n_req)

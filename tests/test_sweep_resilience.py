@@ -188,6 +188,54 @@ def test_validate_mode_sweep_bit_identical():
     _assert_same_cells(res, ref)
 
 
+def test_journal_save_atomic_under_concurrent_writers(tmp_path):
+    """Racing writers on one journal key (two resumed sweeps sharing a
+    journal) must each land a complete file: every interleaved load sees
+    a full, valid npz (os.replace is atomic), and no tmp files leak."""
+    import os
+    import threading
+    jd = str(tmp_path / "journal")
+    key = "deadbeef" * 5
+    arrays = {f"m{i}": np.arange(1_000, dtype=np.int64) + i
+              for i in range(4)}
+    errors = []
+
+    def writer():
+        try:
+            for _ in range(25):
+                sweep._journal_save(jd, key, arrays)
+                got = sweep._journal_load(jd, key)
+                assert got is not None and set(got) == set(arrays)
+                for k in arrays:
+                    assert np.array_equal(got[k], arrays[k]), k
+        except Exception as exc:     # surface in the main thread
+            errors.append(exc)
+
+    threads = [threading.Thread(target=writer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert os.listdir(jd) == [key + ".npz"]       # no tmp leftovers
+
+
+def test_sync_mode_journal_resume(tmp_path, monkeypatch):
+    """The strict synchronous path (streaming=False) journals and
+    resumes exactly like the pipeline."""
+    cells = _cells()
+    ref = sweep.run_sweep(_spec(cells))
+    jd = str(tmp_path / "journal")
+    res1 = sweep.run_sweep(_spec(cells, streaming=False, journal=jd))
+    _assert_same_cells(res1, ref)
+
+    def forbidden(*a, **kw):
+        raise AssertionError("engine must not run on a full journal")
+    monkeypatch.setattr(engine, "batched_simulate", forbidden)
+    res2 = sweep.run_sweep(_spec(cells, streaming=False, journal=jd))
+    _assert_same_cells(res2, res1)
+
+
 def test_spec_validation():
     cells = _cells()[:1]
     with pytest.raises(ValueError, match="cells"):
@@ -200,3 +248,11 @@ def test_spec_validation():
         _spec(cells, max_retries=-1)
     with pytest.raises(ValueError, match="retry_base_s"):
         _spec(cells, retry_base_s=-0.5)
+    with pytest.raises(ValueError, match="prefetch"):
+        _spec(cells, prefetch=0)
+    with pytest.raises(ValueError, match="cond_sharding"):
+        _spec(cells, cond_sharding="sideways")
+    with pytest.raises(ValueError, match="prune"):
+        _spec(cells, prune="aggressive")
+    with pytest.raises(ValueError, match="on_bucket"):
+        _spec(cells, on_bucket=42)
