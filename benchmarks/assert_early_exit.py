@@ -25,8 +25,8 @@ import sys
 from benchmarks._util import (BENCH_JSON_DEFAULT, BENCH_JSON_ENV,
                               FigureRecord)
 
-GATED_FIGURES = ("fig11", "fig_policy", "fig_refresh", "fig_fault",
-                 "fig_serve")
+GATED_FIGURES = ("fig11", "fig_policy", "fig_ooo", "fig_refresh",
+                 "fig_fault", "fig_serve")
 
 #: minimum stream_warm/sync cells_per_s ratio the fig_scale smoke grid
 #: must reach on its best row (the streaming pipeline + persistent

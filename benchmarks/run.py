@@ -22,6 +22,7 @@ BENCHES = [
     "benchmarks.paper_fig13",         # layer-count sensitivity 2/4/8
     "benchmarks.paper_fig14",         # MPKI vs energy
     "benchmarks.paper_fig_policy",    # controller-policy sensitivity
+    "benchmarks.paper_fig_ooo",       # OoO window depth x OooSelect
     "benchmarks.paper_fig_refresh",   # refresh-management / deep power states
     "benchmarks.paper_fig_fault",     # fault injection / graceful degradation
     "benchmarks.paper_fig_serve",     # serve<->sim loop: captured LM traffic

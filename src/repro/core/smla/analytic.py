@@ -125,7 +125,12 @@ def estimate_service_cycles(stack: StackConfig, traces: dict,
     bank = total * (lat + wr * stack.t_wr) / max(banks_total, 1)
     arrival = float(np.max(np.asarray(traces["inst"])[:, -1])) \
         / core.inst_per_fast_cycle
-    capq = max(min(core.q_size, n_cores * core.mshr), 1)
+    # reachable occupancy: the transaction window multiplies the per-core
+    # MSHR-gated in-flight cap (window=1 keeps the historical value); a
+    # deeper window can only relieve the through-queue serialisation, so
+    # the estimate stays an upper bound across the window axis (pinned
+    # over window x OooSelect in tests/test_ooo.py)
+    capq = max(min(core.q_size, n_cores * core.mshr * core.window), 1)
     chain_mult = -(-n_cores // capq)          # 1 whenever q_size >= cores
     resid = (lat + dur_max + wr_cost + sr_cost
              + (n_cores if chain_mult > 1 else 0))

@@ -88,6 +88,23 @@ class LayerClockPolicy(enum.IntEnum):
                       # tier clocks (CASCADED).
 
 
+class OooSelect(enum.IntEnum):
+    """Out-of-order selection over the tagged transaction window.
+
+    The engine's datapath is a per-core tagged window (depth
+    ``CoreParams.window * mshr``, static like ``q_size``); this selector
+    decides which in-flight entries the scheduler and the bus favour
+    beyond plain age order.  IN_ORDER reproduces the FR-FCFS engine
+    exactly — with ``window=1`` it is the bit-identical historical
+    controller."""
+    IN_ORDER = 0      # age order only (the historical FR-FCFS datapath)
+    ROW_GROUP = 1     # prefer entries hitting the currently open row, and
+                      # complete row-hit transfers ahead of bank cycles
+    DIR_BATCH = 2     # group reads vs writes per bus group to amortise the
+                      # tWTR write-to-read turnaround
+    ROW_DIR = 3       # both: row grouping + direction batching
+
+
 @dataclasses.dataclass(frozen=True)
 class ControllerPolicy:
     """One point of the controller-policy cross-product.
@@ -102,6 +119,7 @@ class ControllerPolicy:
     self_refresh: SelfRefreshPolicy = SelfRefreshPolicy.OFF
     ref_postpone: RefreshPostpone = RefreshPostpone.STRICT
     layer_clock: LayerClockPolicy = LayerClockPolicy.UNIFORM
+    ooo: OooSelect = OooSelect.IN_ORDER
 
     @property
     def is_default(self) -> bool:
@@ -131,6 +149,10 @@ class ControllerPolicy:
             parts.append("post8")
         if self.layer_clock == LayerClockPolicy.GATED:
             parts.append("clkgate")
+        if self.ooo != OooSelect.IN_ORDER:
+            parts.append({OooSelect.ROW_GROUP: "ooo-row",
+                          OooSelect.DIR_BATCH: "ooo-dir",
+                          OooSelect.ROW_DIR: "ooo-rowdir"}[self.ooo])
         return "-".join(parts)
 
     @classmethod
@@ -138,8 +160,9 @@ class ControllerPolicy:
         """The full controller cross-product — the policy-search axis for
         large sweeps (2 schedulers x 2 row policies x 2 refresh
         granularities x 3 drain policies x 2 self-refresh x 2 postpone x
-        2 layer clocks = 192 policies; every selector is traced, so the
-        whole axis reuses one compile per shape group).  Keyword pins fix
+        2 layer clocks x 4 OoO selections = 768 policies; every selector
+        is traced, so the whole axis reuses one compile per shape
+        group).  Keyword pins fix
         an axis to one value or a subset, shrinking the grid:
         ``grid(row=RowPolicy.OPEN_PAGE, write_drain=[WriteDrainPolicy.
         INLINE, WriteDrainPolicy.OPPORTUNISTIC])``.  Enumeration order is
@@ -521,6 +544,7 @@ class StackConfig:
             "sr_sel": np.int32(int(self.policy.self_refresh)),
             "post_sel": np.int32(int(self.policy.ref_postpone)),
             "clk_sel": np.int32(int(self.policy.layer_clock)),
+            "ooo_sel": np.int32(int(self.policy.ooo)),
             "clk_div": clk_div,
             # fault axes (core/smla/faults.py) — traced like the policy
             # selectors: per-rank JEDEC tREFI derating, the ECC re-read

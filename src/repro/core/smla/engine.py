@@ -17,17 +17,25 @@ The per-cycle step is a fixed pipeline of composable **stage functions**
   queued (per-rank debt, cap 8) and owed refreshes pull in during idle
   or write-drain shadow windows; a rank in self-refresh suspends its
   deadlines entirely (it refreshes internally).
-* `_stage_enqueue`   round-robin one core per cycle into the controller
-  queue (depth `CoreParams.q_size`; a full queue stalls the core — no
-  request is ever dropped).
-* `_stage_schedule`  one CAS per cycle, picked by the scheduler policy
-  (FR-FCFS row hits first, or strict FCFS) over the row policy's bank
-  state (open-page keeps rows open; closed-page auto-precharges — zero
-  row hits, structurally) under the write-drain policy's eligibility
-  (inline, drain-when-full burst, or opportunistic low-watermark).
+* `_stage_enqueue`   round-robin one core per cycle into the core's
+  tagged transaction-window segment (depth min(mshr * `CoreParams.
+  window`, q_size) per core, `q_size` the shared credit cap; tags are
+  program-order indices).  A full window or exhausted credit stalls the
+  core — no request is ever dropped.
+* `_stage_schedule`  one CAS per cycle, picked over the whole window by
+  the scheduler policy (FR-FCFS row hits first, or strict FCFS) plus the
+  OoO window selection (`OooSelect`: row grouping / direction batching
+  sub-tier bonuses) over the row policy's bank state (open-page keeps
+  rows open; closed-page auto-precharges — zero row hits, structurally)
+  under the write-drain policy's eligibility (inline, drain-when-full
+  burst, or opportunistic low-watermark).
 * `_stage_transfer`  one bus start per group per cycle; cascaded-SLR time
-  slots, write recovery (tWR) and write-to-read turnaround (tWTR).
-* `_stage_retire`    completed transfers retire; MSHRs free.
+  slots, write recovery (tWR) and write-to-read turnaround (tWTR); under
+  `OooSelect` row grouping completes page-hit transfers first and
+  direction batching extends same-direction runs to amortise tWTR.
+* `_stage_retire`    completed transfers retire out of order; tags and
+  MSHRs free (`n_ooo_retire` counts completions ahead of an older
+  same-core tag).
 * `_stage_progress`  3-wide 3.2 GHz cores, MSHR-limited, instruction-
   window runahead (the paper's Table-3 core model).
 * `_stage_power`     power-down / self-refresh residency: a rank idle
@@ -86,7 +94,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -189,24 +196,17 @@ class SimOptions:
         return self
 
 
-_UNSET = object()
-
-
-def _coerce_options(options, chunk, fn_name: str) -> SimOptions:
-    """Accept the new surface (a SimOptions) or the deprecated one
-    (positional int horizon + ``chunk=`` kwarg) with a DeprecationWarning;
-    one release of overlap, then the int path goes away."""
-    if isinstance(options, SimOptions):
-        if chunk is not _UNSET:
-            raise TypeError(
-                f"{fn_name}: pass chunk inside SimOptions, not as a kwarg")
-        return options
-    warnings.warn(
-        f"{fn_name}(..., horizon: int, chunk=...) is deprecated; pass "
-        f"SimOptions(horizon=..., chunk=...) instead",
-        DeprecationWarning, stacklevel=3)
-    return SimOptions(horizon=int(options),
-                      chunk=DEFAULT_CHUNK if chunk is _UNSET else chunk)
+def _require_options(options, fn_name: str) -> SimOptions:
+    """The execution surface is a SimOptions, full stop.  (The PR-6
+    deprecation shim — positional int horizon + ``chunk=`` kwarg — had
+    its one release of overlap and is gone; fail with a migration hint
+    instead of a cryptic attribute error.)"""
+    if not isinstance(options, SimOptions):
+        raise TypeError(
+            f"{fn_name}: pass SimOptions(horizon=..., chunk=...) — the "
+            f"legacy positional-int horizon surface was removed "
+            f"(got {type(options).__name__})")
+    return options
 
 
 def _check_backend(options: SimOptions) -> None:
@@ -259,14 +259,24 @@ def n_chunks(horizon: int, chunk: int | None) -> int:
 @dataclasses.dataclass(frozen=True)
 class CoreParams:
     mshr: int = 8
-    window: float = 128.0        # instruction-window runahead
+    inst_window: float = 128.0   # instruction-window runahead
     inst_per_fast_cycle: float = 12.0   # 3-wide * 3.2GHz * 1.25ns
-    #: controller request-queue depth (static: sizes the queue arrays).
-    #: A full queue stalls enqueue — requests are never dropped (invariant
-    #: tested in tests/test_policies.py).  Also feeds the write-drain
-    #: watermarks (`policies.drain_watermarks`: 3/4 and 1/4 of the
-    #: MSHR-reachable occupancy min(q_size, n_cores*mshr)).
+    #: controller request-queue credit cap (static).  Total window
+    #: occupancy across cores never exceeds it; a core at the cap stalls
+    #: enqueue — requests are never dropped (invariant tested in
+    #: tests/test_policies.py).  Also feeds the write-drain watermarks
+    #: (`policies.drain_watermarks`: 3/4 and 1/4 of the reachable
+    #: occupancy min(q_size, n_cores*mshr*window)).
     q_size: int = 32
+    #: tagged transaction-window depth multiplier (static, like q_size:
+    #: it sizes the window arrays, so changing it recompiles).  Each core
+    #: owns a private segment of min(mshr * window, q_size) in-flight
+    #: entries carrying tag/rank/bank/row/direction/age; enqueue
+    #: allocates tags in program order, schedule and transfer select
+    #: over the whole window (`OooSelect` decides how), retire completes
+    #: out of order and frees tags.  window=1 is the bit-identical
+    #: historical datapath: the per-core MSHR file IS the window.
+    window: int = 1
 
 
 # ----------------------------------------------------------------------------
@@ -386,19 +396,31 @@ def _stage_refresh(st, aux, t, ctx):
 
 
 def _stage_enqueue(st, aux, t, ctx):
-    """Enqueue (round-robin one core per cycle).  A full queue or full
-    MSHR file stalls the core — `do_enq` stays False and the request is
-    retried next round; nothing is ever dropped."""
-    n_req, tr = ctx["n_req"], ctx["traces"]
+    """Enqueue (round-robin one core per cycle) into the core's private
+    window segment.  The tag is the request's program-order index
+    (`c_next`) — monotone and unique per core, so retire can observe
+    out-of-order completion.  A full segment, exhausted shared credit
+    (`q_size`), or full MSHR file stalls the core — `do_enq` stays False
+    and the request is retried next round; nothing is ever dropped.
+
+    window=1 equivalence with the historical shared queue: the segment
+    has min(mshr, q_size) slots and per-core occupancy equals `c_out`,
+    so `mshr_ok & credit_ok` implies a free segment slot (c_out <= total
+    occupancy < q_size and c_out < mshr) — the admission decision is
+    bit-identical, only the slot *position* differs, and every consumer
+    selects by score/segment reductions, never by slot order."""
+    n_req, tr, Wd = ctx["n_req"], ctx["traces"], ctx["Wd"]
     cid = t % ctx["n_cores"]
     nxt = st["c_next"][cid]
     has_req = nxt < n_req
     idx = jnp.minimum(nxt, n_req - 1)
     arrived = tr["inst"][cid, idx] <= st["c_inst"][cid]
-    mshr_ok = st["c_out"][cid] < ctx["core"].mshr
-    free_slot = jnp.argmin(st["qv"])          # first False
+    mshr_ok = st["c_out"][cid] < ctx["core"].mshr * ctx["core"].window
+    credit_ok = jnp.where(st["qv"], 1, 0).sum() < ctx["core"].q_size
+    seg = jax.lax.dynamic_slice(st["qv"], (cid * Wd,), (Wd,))
+    free_slot = cid * Wd + jnp.argmin(seg)    # first False in the segment
     slot_ok = ~st["qv"][free_slot]
-    do_enq = has_req & arrived & mshr_ok & slot_ok
+    do_enq = has_req & arrived & mshr_ok & credit_ok & slot_ok
 
     def put(field, val):
         cur = st[field]
@@ -406,7 +428,7 @@ def _stage_enqueue(st, aux, t, ctx):
             jnp.where(do_enq, val, cur[free_slot]))
 
     put("qv", True)
-    put("qc", cid)
+    put("qtag", nxt)
     put("qr", tr["rank"][cid, idx])
     put("qb", tr["bank"][cid, idx])
     put("qrow", tr["row"][cid, idx])
@@ -414,6 +436,7 @@ def _stage_enqueue(st, aux, t, ctx):
     put("qarr", t)
     put("qphase", 1)
     put("qwr", tr["wr"][cid, idx])
+    put("whit", False)
     st["c_next"] = st["c_next"].at[cid].add(jnp.where(do_enq, 1, 0))
     st["c_out"] = st["c_out"].at[cid].add(jnp.where(do_enq, 1, 0))
     return st, aux
@@ -467,9 +490,15 @@ def _stage_schedule(st, aux, t, ctx):
     hit = open_row == qrow
     closed = open_row < 0
     drain_write = pol["drain_full"] & draining & qwr
+    # OoO window selection (additive sub-tier bonuses, zero under
+    # IN_ORDER): prefer the open row, or the bus group's last granted
+    # direction (`grp_last_wr` — updated at grant in `_stage_transfer`)
+    dir_match = qwr == st["grp_last_wr"][ctx["group_of_rank"][qr]]
     # score: policy bonus first, then age (smaller arrival = older)
     score = jnp.where(cand,
-                      policies.schedule_bonus(pol, hit, drain_write) - qarr,
+                      policies.schedule_bonus(pol, hit, drain_write)
+                      + policies.ooo_schedule_bonus(pol, hit, dir_match)
+                      - qarr,
                       -BIG)
     pick = jnp.argmax(score)
     can_issue = cand[pick]
@@ -488,7 +517,13 @@ def _stage_schedule(st, aux, t, ctx):
         jnp.where(can_issue, 2, qphase[pick]))
     st["qready"] = st["qready"].at[pick].set(
         jnp.where(can_issue, ready, st["qready"][pick]))
+    # record the row-hit bit on the entry: `_stage_transfer` completes
+    # whit transfers ahead of bank-cycle ones under ROW_GROUP/ROW_DIR
+    st["whit"] = st["whit"].at[pick].set(
+        jnp.where(can_issue, hit[pick], st["whit"][pick]))
     st["n_act"] = st["n_act"] + jnp.where(can_issue & ~hit[pick], 1, 0)
+    st["n_row_hit"] = st["n_row_hit"] + jnp.where(
+        can_issue & hit[pick], 1, 0)
     st["n_conflict"] = st["n_conflict"] + jnp.where(
         can_issue & ~hit[pick] & ~closed[pick], 1, 0)
     return st, aux
@@ -497,12 +532,20 @@ def _stage_schedule(st, aux, t, ctx):
 def _stage_transfer(st, aux, t, ctx):
     """Bus grant: one transfer start per group per cycle.  Padded groups
     (g >= n_groups) never match any valid entry's group_of_rank, so the
-    extra iterations are exact no-ops."""
+    extra iterations are exact no-ops.
+
+    OoO window selection (zero effect under IN_ORDER): row grouping
+    completes page-hit transfers (`whit`) ahead of bank-cycle ones;
+    direction batching keeps granting the group's last direction
+    (`grp_last_wr`).  `wtr_stall` attributes the turnaround cost the
+    batching amortises: cycles a free bus group granted nothing while a
+    read sat blocked solely by the write-to-read window."""
     R, pol = ctx["R"], ctx["pol"]
     qv, qr, qb, qarr, qwr = st["qv"], st["qr"], st["qb"], st["qarr"], st["qwr"]
     qphase, qready, qdone = st["qphase"], st["qready"], st["qdone"]
     bank_busy = st["bank_busy"]
     grp_busy, grp_wr_until = st["grp_busy"], st["grp_wr_until"]
+    grp_last_wr = st["grp_last_wr"]
     ref_until = st["ref_until"]
     t_wr, t_wtr = ctx["t_wr"], ctx["t_wtr"]
 
@@ -511,18 +554,23 @@ def _stage_transfer(st, aux, t, ctx):
     n_grants, n_slot_grants = st["n_grants"], st["n_slot_grants"]
     n_ecc = st["n_ecc_reread"]
     bus_cycles, wr_bus_cycles = st["bus_cycles"], st["wr_bus_cycles"]
+    wtr_stall = st["wtr_stall"]
     wr_extra = policies.write_recovery_extra(pol, ctx["t_rp"])
     for g in range(R):
         in_g = ctx["group_of_rank"][qr] == g
-        cand3 = qv & (qphase == 3) & in_g
-        # slotted (cascaded SLR): rank may start only in its time slot
-        cand3 = cand3 & (~ctx["slotted"] | slot_match)
-        # reads wait out the group's write-to-read turnaround window;
+        base3 = qv & (qphase == 3) & in_g
+        # slotted (cascaded SLR): rank may start only in its time slot;
         # a refreshing bank transfers nothing until its tRFC elapses.
-        cand3 = cand3 & (qwr | (grp_wr_until[g] <= t))
-        cand3 = cand3 & (ref_until[qr, qb] <= t)
-        cand3 = cand3 & (grp_busy[g] <= t)
-        score3 = jnp.where(cand3, -qarr, -BIG)
+        base3 = base3 & (~ctx["slotted"] | slot_match)
+        base3 = base3 & (ref_until[qr, qb] <= t)
+        # reads wait out the group's write-to-read turnaround window
+        wtr_ok = qwr | (grp_wr_until[g] <= t)
+        cand3 = base3 & wtr_ok & (grp_busy[g] <= t)
+        dir_match = qwr == grp_last_wr[g]
+        score3 = jnp.where(
+            cand3,
+            policies.ooo_transfer_bonus(pol, st["whit"], dir_match) - qarr,
+            -BIG)
         p3 = jnp.argmax(score3)
         go = cand3[p3]
         # transient-error pricing (faults.FaultConfig.ecc_rate): every
@@ -548,23 +596,38 @@ def _stage_transfer(st, aux, t, ctx):
                       bank_busy[r3, b3]))
         grp_wr_until = grp_wr_until.at[g].set(
             jnp.where(go_wr, t + d + t_wtr, grp_wr_until[g]))
+        grp_last_wr = grp_last_wr.at[g].set(
+            jnp.where(go, qwr[p3], grp_last_wr[g]))
+        # turnaround-stall attribution: the group's bus is free, nothing
+        # was granted, and at least one read passed every filter except
+        # the write-to-read window — a cycle direction batching exists
+        # to win back.  Gated like the other per-cycle counters so it
+        # freezes at the makespan.
+        stall = (grp_busy[g] <= t) & ~go & (base3 & ~wtr_ok).any()
+        wtr_stall = wtr_stall + jnp.where(aux["work_left"] & stall, 1, 0)
         bus_cycles = bus_cycles + jnp.where(go, d, 0)
         wr_bus_cycles = wr_bus_cycles + jnp.where(go_wr, d, 0)
         n_grants = n_grants + jnp.where(go, 1, 0)
         n_slot_grants = n_slot_grants + jnp.where(go & slot_match[p3], 1, 0)
     st.update(qphase=qphase, qdone=qdone, bank_busy=bank_busy,
               grp_busy=grp_busy, grp_wr_until=grp_wr_until,
+              grp_last_wr=grp_last_wr,
               bus_cycles=bus_cycles, wr_bus_cycles=wr_bus_cycles,
               n_grants=n_grants, n_slot_grants=n_slot_grants,
-              n_ecc_reread=n_ecc)
+              n_ecc_reread=n_ecc, wtr_stall=wtr_stall)
     return st, aux
 
 
 def _stage_retire(st, aux, t, ctx):
-    """Retire completed transfers; free queue slots and MSHRs."""
-    n_cores = ctx["n_cores"]
-    qv, qc, qphase, qdone, qwr = (st["qv"], st["qc"], st["qphase"],
-                                  st["qdone"], st["qwr"])
+    """Retire completed transfers out of order; free window slots (tags)
+    and MSHRs.  `n_ooo_retire` counts retires completing ahead of an
+    older outstanding tag from the same core — the split-transaction
+    observable (nonzero even at window=1 under FR-FCFS, which already
+    completes across banks out of order; the tagged window makes it
+    measurable and lets `OooSelect` widen it deliberately)."""
+    n_cores, qc = ctx["n_cores"], ctx["qc"]
+    qv, qphase, qdone, qwr = (st["qv"], st["qphase"], st["qdone"],
+                              st["qwr"])
     fin = qv & (qphase == 4) & (qdone <= t)
     fin_per_core = jax.ops.segment_sum(jnp.where(fin, 1, 0), qc,
                                        num_segments=n_cores)
@@ -573,6 +636,12 @@ def _stage_retire(st, aux, t, ctx):
         jnp.where(fin, t, -1), qc, num_segments=n_cores))
     st["c_out"] = st["c_out"] - fin_per_core
     st["n_wr"] = st["n_wr"] + jnp.where(fin & qwr, 1, 0).sum()
+    # a retire is out-of-order when the same core still has an older tag
+    # in flight (valid, not retiring this cycle)
+    rem_tag = jnp.where(qv & ~fin, st["qtag"], BIG)
+    min_rem = jax.ops.segment_min(rem_tag, qc, num_segments=n_cores)
+    st["n_ooo_retire"] = st["n_ooo_retire"] + jnp.where(
+        fin & (min_rem[qc] < st["qtag"]), 1, 0).sum()
     st["qv"] = qv & ~fin
     st["qphase"] = jnp.where(fin, 0, qphase)
     return st, aux
@@ -588,10 +657,10 @@ def _stage_progress(st, aux, t, ctx):
     n_cores, n_req, core = ctx["n_cores"], ctx["n_req"], ctx["core"]
     tr_inst = ctx["traces"]["inst"]
     inst_or_big = jnp.where(st["qv"], st["qinst"], jnp.float32(1e30))
-    oldest = jax.ops.segment_min(inst_or_big, st["qc"],
+    oldest = jax.ops.segment_min(inst_or_big, ctx["qc"],
                                  num_segments=n_cores)
     oldest = jnp.minimum(oldest, jnp.float32(1e30))
-    window_ok = (st["c_inst"] - oldest) < core.window
+    window_ok = (st["c_inst"] - oldest) < core.inst_window
     nxt_inst = jnp.where(st["c_next"] < n_req,
                          tr_inst[jnp.arange(n_cores),
                                  jnp.minimum(st["c_next"], n_req - 1)],
@@ -669,6 +738,12 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
     R = params["dur"].shape[0]                      # padded rank count
     B = banks
     Q = core.q_size
+    # tagged transaction window: each core owns a private segment of Wd
+    # slots in one flat (n_cores * Wd,) array; `q_size` is the shared
+    # credit cap on total occupancy.  window=1 admits exactly the
+    # historical shared queue (see `_stage_enqueue`).
+    Wd = min(core.mshr * max(int(core.window), 1), Q)
+    QT = n_cores * Wd
     n_req = params["n_req"]
     t_refi, t_rfc = params["t_refi"], params["t_rfc"]
     pol = policies.selector_view(params)
@@ -685,7 +760,8 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
                            jnp.maximum(t_refi_eff // jnp.maximum(derate, 1),
                                        1),
                            t_refi_eff)
-    wq_hi, wq_lo = policies.drain_watermarks(Q, n_cores, core.mshr)
+    wq_hi, wq_lo = policies.drain_watermarks(Q, n_cores, core.mshr,
+                                             core.window)
     # DVFS-style per-layer clock gating: under LayerClockPolicy.GATED each
     # rank's transfer duration stretches by its traced divider (ones for
     # every organisation without private per-layer links, so the default
@@ -707,6 +783,10 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         "real_rank": jnp.arange(R, dtype=jnp.int32) < params["n_ranks"],
         "pol": pol,
         "wq_hi": wq_hi, "wq_lo": wq_lo,
+        # window layout: the owning core of each flat slot is a static
+        # function of position (slot // Wd) — no per-entry core field
+        "Wd": Wd,
+        "qc": jnp.arange(QT, dtype=jnp.int32) // Wd,
         "traces": {
             "inst": traces["inst"].astype(jnp.float32),
             "rank": traces["rank"].astype(jnp.int32) % params["n_ranks"],
@@ -725,16 +805,17 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
 
     i32 = jnp.int32
     st = dict(
-        qv=jnp.zeros(Q, bool), qc=jnp.zeros(Q, i32),
-        qr=jnp.zeros(Q, i32), qb=jnp.zeros(Q, i32),
-        qrow=jnp.zeros(Q, i32), qinst=jnp.zeros(Q, jnp.float32),
-        qarr=jnp.zeros(Q, i32), qphase=jnp.zeros(Q, i32),
-        qready=jnp.zeros(Q, i32), qdone=jnp.zeros(Q, i32),
-        qwr=jnp.zeros(Q, bool),
+        qv=jnp.zeros(QT, bool), qtag=jnp.zeros(QT, i32),
+        qr=jnp.zeros(QT, i32), qb=jnp.zeros(QT, i32),
+        qrow=jnp.zeros(QT, i32), qinst=jnp.zeros(QT, jnp.float32),
+        qarr=jnp.zeros(QT, i32), qphase=jnp.zeros(QT, i32),
+        qready=jnp.zeros(QT, i32), qdone=jnp.zeros(QT, i32),
+        qwr=jnp.zeros(QT, bool), whit=jnp.zeros(QT, bool),
         bank_busy=jnp.zeros((R, B), i32),
         bank_row=-jnp.ones((R, B), i32),
         grp_busy=jnp.zeros(R, i32),
         grp_wr_until=jnp.zeros(R, i32),
+        grp_last_wr=jnp.zeros(R, bool),
         # stagger refresh across ranks (rank r's first tREFI deadline at
         # (r+1)/n_ranks of the interval) — synchronized deadlines would
         # black out the whole channel every tREFI, which real controllers
@@ -762,6 +843,8 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         n_drain_bursts=jnp.zeros((), i32),
         n_grants=jnp.zeros((), i32), n_slot_grants=jnp.zeros((), i32),
         n_ecc_reread=jnp.zeros((), i32),
+        n_row_hit=jnp.zeros((), i32), wtr_stall=jnp.zeros((), i32),
+        n_ooo_retire=jnp.zeros((), i32),
     )
     # ---- chunked execution with early exit --------------------------------
     # Fixed-width scan chunks under a while loop: exit at the first chunk
@@ -846,6 +929,12 @@ def _sim_core(params: dict, traces: dict, horizon: int, core: CoreParams,
         # mode selector echoed back so sweep rows are self-describing
         "n_ecc_reread": final["n_ecc_reread"],
         "degrade_sel": params["degrade_sel"],
+        # OoO window attribution: CAS issues that hit the open row, bus
+        # cycles lost to write-to-read turnaround with a read waiting,
+        # and retires completing ahead of an older same-core tag
+        "n_row_hit": final["n_row_hit"],
+        "wtr_stall_cycles": final["wtr_stall"],
+        "n_ooo_retire": final["n_ooo_retire"],
         "n_enqueued": final["c_next"].sum(),
         "n_outstanding": jnp.where(final["qv"], 1, 0).sum(),
         "bus_util": final["bus_cycles"] / jnp.maximum(
@@ -936,6 +1025,7 @@ _VALIDATE_FINITE = ("bandwidth_gbps", "ipc", "bus_util", "pd_frac",
 _VALIDATE_NONNEG = ("makespan_ns", "served", "bus_cycles", "wr_bus_cycles",
                     "refresh_cycles", "pd_cycles", "sr_cycles", "n_grants",
                     "n_act", "n_wr", "n_ecc_reread", "ref_debt_end",
+                    "n_row_hit", "wtr_stall_cycles", "n_ooo_retire",
                     "chunks_run")
 
 
@@ -1038,20 +1128,19 @@ def _compiled(options: SimOptions, core: CoreParams, banks: int,
 
 
 def batched_simulate(params: dict, traces: dict,
-                     options: SimOptions | int, core: CoreParams,
-                     banks: int, *, chunk=_UNSET,
+                     options: SimOptions, core: CoreParams,
+                     banks: int, *,
                      local_cond_devices: int = 0) -> dict:
     """Run a stacked batch of cells: every leaf has a leading cell axis.
 
-    `options` is the execution surface (`SimOptions`); passing an int
-    horizon (+ the legacy ``chunk=`` kwarg) still works one release, with
-    a DeprecationWarning.  Inputs may carry a per-device sharding over
-    the cell axis (see ``sweep.run_sweep``); the jitted program then
-    partitions along it.  ``local_cond_devices=n > 1`` instead compiles
-    the reduce-tree cond path: a fully-manual shard_map over the first
-    `n` devices where each device's while_loop exits on its *local*
-    shard (scan backend only; n_cells must be divisible by n)."""
-    options = _coerce_options(options, chunk, "batched_simulate").resolved()
+    `options` is the execution surface (`SimOptions`).  Inputs may carry
+    a per-device sharding over the cell axis (see ``sweep.run_sweep``);
+    the jitted program then partitions along it.
+    ``local_cond_devices=n > 1`` instead compiles the reduce-tree cond
+    path: a fully-manual shard_map over the first `n` devices where each
+    device's while_loop exits on its *local* shard (scan backend only;
+    n_cells must be divisible by n)."""
+    options = _require_options(options, "batched_simulate").resolved()
     _check_backend(options)
     _apply_compile_cache(options.compile_cache_dir)
     shard = int(local_cond_devices) if int(local_cond_devices) > 1 else 0
@@ -1065,13 +1154,13 @@ def batched_simulate(params: dict, traces: dict,
     return fn(_with_timing_defaults(params), _with_wr(traces))
 
 
-def simulate(stack: StackConfig, traces: dict, options: SimOptions | int,
-             core: CoreParams = CoreParams(), *, chunk=_UNSET) -> dict:
+def simulate(stack: StackConfig, traces: dict, options: SimOptions,
+             core: CoreParams = CoreParams()) -> dict:
     """traces: dict of (C, n_req) arrays (inst f32; rank/bank/row i32;
     optional wr i32, defaulting to all-reads).  `options` as in
-    `batched_simulate` (int horizon is the deprecated legacy surface).
-    Returns metrics dict of scalars / per-core arrays (all jnp)."""
-    options = _coerce_options(options, chunk, "simulate").resolved()
+    `batched_simulate`.  Returns metrics dict of scalars / per-core
+    arrays (all jnp)."""
+    options = _require_options(options, "simulate").resolved()
     _check_backend(options)
     _apply_compile_cache(options.compile_cache_dir)
     n_cores, n_req = traces["inst"].shape

@@ -25,6 +25,13 @@ choice as a **traced int32 selector** carried in the engine's params dict:
                                           durations stretch by the
                                           per-rank ``clk_div`` vector,
                                           standby energy falls)
+* ``ooo_sel``    — `OooSelect`:          in-order | row grouping |
+                                          direction batching | both — the
+                                          out-of-order selection over the
+                                          tagged transaction window
+                                          (window *depth* is the static
+                                          ``CoreParams.window`` knob;
+                                          the selection is traced)
 
 Because the selectors are traced (not Python closure constants), one
 compiled engine program serves the whole policy cross-product with the
@@ -46,9 +53,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.smla.config import (ControllerPolicy, LayerClockPolicy,
-                                    RefreshGranularity, RefreshPostpone,
-                                    RowPolicy, SchedPolicy, SelfRefreshPolicy,
-                                    WriteDrainPolicy)
+                                    OooSelect, RefreshGranularity,
+                                    RefreshPostpone, RowPolicy, SchedPolicy,
+                                    SelfRefreshPolicy, WriteDrainPolicy)
 
 #: score/sentinel magnitude shared with the engine (engine.BIG aliases
 #: this) — the int32 score encoding above depends on it staying 2**30.
@@ -68,7 +75,20 @@ BIG = np.int32(2**30)
 #: provenance (it surfaces in the metrics dict) and defaults to 0
 #: (RETIME — inert on a clean stack) like every other selector.
 SELECTOR_KEYS = ("sched_sel", "row_sel", "ref_sel", "drain_sel",
-                 "sr_sel", "post_sel", "clk_sel", "degrade_sel")
+                 "sr_sel", "post_sel", "clk_sel", "degrade_sel", "ooo_sel")
+
+#: out-of-order window bonuses (`OooSelect`), additive on top of
+#: `schedule_bonus`: a row-group match adds BIG>>2, a direction-batch
+#: match BIG>>3.  Worst-case total score stays int32-safe
+#: (1.5*BIG drain + 0.375*BIG ooo = 1.875*BIG < 2**31), and the tier
+#: order is preserved for every horizon < 2**27 (far above any real
+#: makespan): drain-burst writes (1.5*BIG - qarr) still outrank a
+#: row-hit read with both OoO bonuses (<= 1.375*BIG), and a row hit
+#: (>= BIG - qarr) still outranks any miss (dir bonus only,
+#: <= BIG>>3).  numpy scalars like BIG: Pallas kernel bodies must
+#: stay closure-free.
+OOO_ROW_BONUS = np.int32(BIG >> 2)
+OOO_DIR_BONUS = np.int32(BIG >> 3)
 
 #: JEDEC maximum number of postponed refresh commands per rank (the "8x
 #: postpone" of LPDDR/DDR4): the engine's per-rank debt counter is capped
@@ -85,14 +105,17 @@ def t_rfc_per_bank(t_rfc):
     return (t_rfc + 1) // 2
 
 
-def drain_watermarks(q_size: int, n_cores: int, mshr: int) -> tuple[int, int]:
+def drain_watermarks(q_size: int, n_cores: int, mshr: int,
+                     window: int = 1) -> tuple[int, int]:
     """(high, low) write-drain watermarks.
 
     Watermarks are fractions (3/4, 1/4) of the *reachable* queue
-    occupancy — min(q_size, n_cores * mshr), since enqueue is MSHR-gated
-    — not of the raw queue depth; otherwise a deep queue in front of few
-    cores could never arm the drain burst."""
-    cap = max(min(q_size, n_cores * mshr), 1)
+    occupancy — min(q_size, n_cores * mshr * window), since enqueue is
+    MSHR-gated (the transaction window multiplies the per-core in-flight
+    cap, `CoreParams.window`) — not of the raw queue depth; otherwise a
+    deep queue in front of few cores could never arm the drain burst.
+    window=1 reproduces the historical values exactly."""
+    cap = max(min(q_size, n_cores * mshr * window), 1)
     return max((3 * cap) // 4, 1), cap // 4
 
 
@@ -121,6 +144,7 @@ POLICY_PRESETS: dict[str, ControllerPolicy] = {
         ref_postpone=RefreshPostpone.POSTPONE_8X),
     "layer_gated": ControllerPolicy(
         layer_clock=LayerClockPolicy.GATED),
+    "ooo_rowdir": ControllerPolicy(ooo=OooSelect.ROW_DIR),
     "all_flipped": ControllerPolicy(
         scheduler=SchedPolicy.FCFS, row=RowPolicy.CLOSED_PAGE,
         refresh_gran=RefreshGranularity.PER_BANK,
@@ -170,6 +194,13 @@ def selector_view(params: dict) -> dict:
         "sr": params["sr_sel"] == int(SelfRefreshPolicy.ENABLED),
         "postpone": params["post_sel"] == int(RefreshPostpone.POSTPONE_8X),
         "clk_gated": params["clk_sel"] == int(LayerClockPolicy.GATED),
+        # OoO window selection decomposes into two independent bits: row
+        # grouping (ROW_GROUP | ROW_DIR) and direction batching
+        # (DIR_BATCH | ROW_DIR) — both False under IN_ORDER
+        "ooo_row": (params["ooo_sel"] == int(OooSelect.ROW_GROUP))
+        | (params["ooo_sel"] == int(OooSelect.ROW_DIR)),
+        "ooo_dir": (params["ooo_sel"] == int(OooSelect.DIR_BATCH))
+        | (params["ooo_sel"] == int(OooSelect.ROW_DIR)),
     }
 
 
@@ -221,6 +252,29 @@ def schedule_bonus(pol: dict, hit, drain_write):
     everything (BIG + BIG//2, int32-safe)."""
     bonus = jnp.where(hit & ~pol["fcfs"], BIG, 0)
     return jnp.where(drain_write, BIG + (BIG >> 1), bonus)
+
+
+def ooo_schedule_bonus(pol: dict, hit, dir_match):
+    """Additive CAS-selection bonus from the OoO window selection
+    (`OooSelect`): row grouping favours entries hitting the open row
+    (meaningful under FCFS, where `schedule_bonus` ignores row state, and
+    sub-tier under FR-FCFS); direction batching favours entries matching
+    the bus group's last granted direction, so the scheduler feeds the
+    bus same-direction runs that amortise tWTR.  Identically zero under
+    IN_ORDER — the historical score is untouched bit-for-bit."""
+    return (jnp.where(pol["ooo_row"] & hit, OOO_ROW_BONUS, 0)
+            + jnp.where(pol["ooo_dir"] & dir_match, OOO_DIR_BONUS, 0))
+
+
+def ooo_transfer_bonus(pol: dict, whit, dir_match):
+    """Additive bus-grant bonus from the OoO window selection: row
+    grouping completes page-hit transfers (`whit`, recorded at CAS
+    issue) ahead of bank-cycle ones; direction batching keeps granting
+    the direction the group last moved, turning read/write interleave
+    into runs.  Identically zero under IN_ORDER, so the historical
+    oldest-first grant order is untouched bit-for-bit."""
+    return (jnp.where(pol["ooo_row"] & whit, OOO_ROW_BONUS, 0)
+            + jnp.where(pol["ooo_dir"] & dir_match, OOO_DIR_BONUS, 0))
 
 
 def write_eligible(pol: dict, draining, n_wq, any_read, lo: int):

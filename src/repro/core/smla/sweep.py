@@ -116,7 +116,8 @@ SCALAR_METRICS = ("bandwidth_gbps", "n_act", "n_row_conflicts", "bus_util",
                   "ref_debt_end", "pd_cycles", "pd_frac", "sr_cycles",
                   "sr_frac", "n_sr_exit", "n_drain_bursts", "n_grants",
                   "n_slot_grants", "n_enqueued", "n_outstanding",
-                  "chunks_run", "n_ecc_reread", "degrade_sel")
+                  "chunks_run", "n_ecc_reread", "degrade_sel",
+                  "n_row_hit", "wtr_stall_cycles", "n_ooo_retire")
 
 #: substrings (matched against ``f"{type(e).__name__}: {e}"``) that mark a
 #: device/runtime error as *transient* — worth a bounded exponential-backoff

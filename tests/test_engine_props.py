@@ -23,7 +23,7 @@ from repro.core.smla.config import (ControllerPolicy, RefreshGranularity,
                                     RefreshPostpone, RowPolicy,
                                     SelfRefreshPolicy, StackConfig,
                                     paper_configs)
-from repro.core.smla.engine import simulate
+from repro.core.smla.engine import SimOptions, simulate
 from repro.core.smla.traces import (WorkloadSpec, core_traces,
                                     lm_serving_trace, synthetic_trace)
 
@@ -46,7 +46,7 @@ HORIZON = 3_000
 def _run(stack: StackConfig, spec: WorkloadSpec, seed: int):
     traces = core_traces(seed, [spec] * N_CORES, N_REQ, stack.n_ranks,
                          stack.banks_per_rank)
-    return simulate(stack, traces, HORIZON), traces
+    return simulate(stack, traces, SimOptions(HORIZON)), traces
 
 
 def _check_invariants(stack: StackConfig, m: dict, traces: dict):
@@ -167,9 +167,9 @@ def test_writes_off_is_exact_noop():
     assert int(traces["wr"].sum()) == 0
 
     no_write_timing = dataclasses.replace(stack, t_wr_ns=0.0, t_wtr_ns=0.0)
-    m_zeroed = simulate(no_write_timing, traces, HORIZON)
+    m_zeroed = simulate(no_write_timing, traces, SimOptions(HORIZON))
     legacy = {k: v for k, v in traces.items() if k != "wr"}
-    m_legacy = simulate(stack, legacy, HORIZON)
+    m_legacy = simulate(stack, legacy, SimOptions(HORIZON))
     for k in m_default:
         a = np.asarray(m_default[k])
         assert np.array_equal(a, np.asarray(m_zeroed[k])), k
@@ -185,7 +185,7 @@ def test_refresh_off_is_exact_noop():
     m_off, traces = _run(off, spec, seed=11)
     assert int(m_off["refresh_cycles"]) == 0
     fast = dataclasses.replace(base, t_refi_ns=500.0)
-    m_fast = simulate(fast, traces, HORIZON)
+    m_fast = simulate(fast, traces, SimOptions(HORIZON))
     assert int(m_fast["refresh_cycles"]) > 0
     assert float(m_fast["makespan_ns"]) >= float(m_off["makespan_ns"])
 
@@ -199,9 +199,9 @@ def test_write_traffic_slows_fixed_work():
                          N_REQ, stack.n_ranks, stack.banks_per_rank)
     wr = dict(ro, wr=(np.arange(N_REQ) % 2).astype(np.int32))  # 50% writes
     m_ro = simulate(stack, {k: np.stack([v] * N_CORES) for k, v in ro.items()},
-                    HORIZON)
+                    SimOptions(HORIZON))
     m_wr = simulate(stack, {k: np.stack([v] * N_CORES) for k, v in wr.items()},
-                    HORIZON)
+                    SimOptions(HORIZON))
     assert int(m_wr["n_wr"]) > 0
     assert float(m_wr["makespan_ns"]) >= float(m_ro["makespan_ns"])
 
@@ -234,11 +234,11 @@ def test_legacy_params_without_write_refresh_timings():
     out = engine.batched_simulate(
         {k: np.stack([v]) for k, v in p.items()},
         {k: np.stack([v]) for k, v in traces.items()},
-        HORIZON, engine.CoreParams(), sc.banks_per_rank)
+        SimOptions(HORIZON), engine.CoreParams(), sc.banks_per_rank)
     assert int(np.asarray(out["pd_cycles"])[0]) == 0
     legacy_like = dataclasses.replace(sc, refresh=False, t_wr_ns=0.0,
                                       t_wtr_ns=0.0, pd_idle_ns=1e9)
-    ref = simulate(legacy_like, traces, HORIZON)
+    ref = simulate(legacy_like, traces, SimOptions(HORIZON))
     for k in ref:
         assert np.array_equal(np.asarray(out[k])[0], np.asarray(ref[k])), k
 
@@ -252,10 +252,10 @@ def test_chunks_run_is_diagnostic_only():
     spec = WorkloadSpec("w", 25.0, 0.5, write_frac=0.4)
     traces = core_traces(5, [spec] * N_CORES, N_REQ, stack.n_ranks,
                          stack.banks_per_rank)
-    full = simulate(stack, traces, HORIZON, chunk=None)
+    full = simulate(stack, traces, SimOptions(HORIZON, chunk=None))
     assert int(full["chunks_run"]) == 1
     for chunk in (100, 512, 2048):
-        m = simulate(stack, traces, HORIZON, chunk=chunk)
+        m = simulate(stack, traces, SimOptions(HORIZON, chunk=chunk))
         for k in full:
             if k == "chunks_run":
                 continue
@@ -347,7 +347,7 @@ if HAVE_HYPOTHESIS:
             refresh_gran=RefreshGranularity.PER_BANK))
         spec = WorkloadSpec("w", mpki, 0.5, write_frac=write_frac)
         m_ab, traces = _run(ab, spec, seed)
-        m_pb = simulate(pb, traces, HORIZON)
+        m_pb = simulate(pb, traces, SimOptions(HORIZON))
         assert int(m_pb["ref_rank_blocked_cycles"]) <= \
             int(m_ab["ref_rank_blocked_cycles"])
 
@@ -388,8 +388,8 @@ if HAVE_HYPOTHESIS:
         spec = WorkloadSpec("w", mpki, 0.5, write_frac=write_frac)
         traces = core_traces(seed, [spec] * N_CORES, N_REQ, stack.n_ranks,
                              stack.banks_per_rank)
-        full = simulate(stack, traces, HORIZON, chunk=None)
-        m = simulate(stack, traces, HORIZON, chunk=chunk)
+        full = simulate(stack, traces, SimOptions(HORIZON, chunk=None))
+        m = simulate(stack, traces, SimOptions(HORIZON, chunk=chunk))
         for k in full:
             if k == "chunks_run":
                 continue
@@ -437,7 +437,7 @@ if HAVE_HYPOTHESIS:
         traces = core_traces(seed, [spec] * N_CORES, N_REQ, stack.n_ranks,
                              stack.banks_per_rank)
         zeroed = dataclasses.replace(stack, t_wr_ns=0.0, t_wtr_ns=0.0)
-        a = simulate(stack, traces, HORIZON)
-        b = simulate(zeroed, traces, HORIZON)
+        a = simulate(stack, traces, SimOptions(HORIZON))
+        b = simulate(zeroed, traces, SimOptions(HORIZON))
         for k in a:
             assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), k

@@ -139,6 +139,55 @@ def test_bandwidth_monotone_in_killed_layers():
             assert b <= a * (1 + 1e-6), f"{cname}: {bws}"
 
 
+def test_remap_non_divisor_fold_is_mod_r_and_uneven():
+    """The documented-but-previously-unasserted REMAP fold imbalance,
+    pinned: with a NON-DIVISOR survivor count (4 physical ranks, one
+    dead layer -> R=3) traffic to dead ranks folds onto survivors
+    exactly mod R, so survivor 0 absorbs rank 3's traffic while ranks 1
+    and 2 keep only their own.
+
+    Two observables:
+    * the fold is literally ``rank % R`` — pre-folding the trace by hand
+      is bit-identical to letting the engine fold it (idempotence pins
+      the formula, not just 'some remapping happened');
+    * the imbalance is real and costs time — a core whose traffic lands
+      on the double-loaded survivor finishes strictly later than the
+      same traffic aimed at an un-doubled survivor, all else equal."""
+    sc = paper_configs(4)["dedicated_slr"]            # per-layer TSV groups
+    scf = _with_faults(sc, dead_layers=(3,), degrade=DegradeMode.REMAP)
+
+    # (a) idempotence: engine fold == hand fold, every metric
+    tr = _traces(sc)
+    pre = dict(tr, rank=(tr["rank"] % 3).astype(tr["rank"].dtype))
+    m_raw = simulate(scf, tr, SimOptions(horizon=HORIZON))
+    m_pre = simulate(scf, pre, SimOptions(horizon=HORIZON))
+    assert int(np.asarray(tr["rank"]).max()) == 3     # fold engages
+    for k in m_raw:
+        assert np.array_equal(np.asarray(m_raw[k]),
+                              np.asarray(m_pre[k])), k
+
+    # (b) uneven loading: core0 hammers rank 0; core1's traffic either
+    # folds ONTO rank 0 (addressed to dead rank 3 -> 3 % 3 == 0, the
+    # double-loaded survivor) or goes to idle rank 1.  Same request
+    # stream otherwise; the collision case must be strictly slower.
+    n = 24
+    base = {"inst": np.zeros((2, n), np.float32),
+            "rank": np.zeros((2, n), np.int32),
+            "bank": np.tile(np.arange(n, dtype=np.int32) % 2, (2, 1)),
+            "row": np.tile(np.arange(n, dtype=np.int32), (2, 1)),
+            "wr": np.zeros((2, n), np.int32)}
+    collide = {k: v.copy() for k, v in base.items()}
+    collide["rank"][1, :] = 3                         # folds onto rank 0
+    spread = {k: v.copy() for k, v in base.items()}
+    spread["rank"][1, :] = 1                          # its own survivor
+    m_c = simulate(scf, collide, SimOptions(horizon=HORIZON))
+    m_s = simulate(scf, spread, SimOptions(horizon=HORIZON))
+    assert np.asarray(m_c["complete"]).all()
+    assert np.asarray(m_s["complete"]).all()
+    assert float(m_c["makespan_ns"]) > float(m_s["makespan_ns"]), \
+        "mod-R double-loading stopped costing time — fold model changed"
+
+
 def test_stuck_group_degrades_like_dead_layer():
     """A stuck TSV group removes its layer from service exactly like a
     dead die (the energy model, not the timing model, distinguishes

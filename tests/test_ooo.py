@@ -1,0 +1,295 @@
+"""Tagged split-transaction window + OooSelect policy axis.
+
+The datapath refactor's contracts, each pinned here:
+
+* **degenerate identity** — `CoreParams(window=1)` + `OooSelect.IN_ORDER`
+  IS today's FR-FCFS engine (the golden grid pins it against history;
+  here the degenerate point is additionally pinned across all five IO
+  models on both backends);
+* **traced selector** — flipping `ControllerPolicy.ooo` NEVER
+  recompiles, standalone or through the batched sweep path, so the
+  window-policy cross-product costs zero extra executables;
+* **static window knob** — `CoreParams.window` sizes the transaction
+  window arrays exactly like `q_size` sizes the queue: a new depth is a
+  new executable, the same depth is a cache hit;
+* **analytic bound** — `analytic.estimate_service_cycles` stays a TRUE
+  upper bound on measured makespan across window x OooSelect;
+* **behaviour** — ROW_GROUP demonstrably converts conflicts into row
+  hits under FCFS; DIR_BATCH never adds write-turnaround stalls; deeper
+  windows retire out of program order (`n_ooo_retire`), a single-entry
+  window cannot.
+
+(No hypothesis dependency — this module must run in a bare
+environment.)"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.smla import engine, policies, sweep
+from repro.core.smla.config import (ControllerPolicy, OooSelect, SchedPolicy,
+                                    paper_configs)
+from repro.core.smla.engine import CoreParams, SimOptions, simulate
+from repro.core.smla.traces import WorkloadSpec, core_traces
+
+N_CORES = 2
+N_REQ = 80
+HORIZON = 30_000          # generous: runs must complete their fixed work
+
+#: write-heavy so DIR_BATCH has turnarounds to amortise, moderately
+#: row-local so ROW_GROUP has hits to chase
+SPEC = WorkloadSpec("ooo", 25.0, 0.6, write_frac=0.4)
+
+
+def _jax_backend_is_tpu() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def _stack(cname="baseline", ooo=OooSelect.IN_ORDER, **over):
+    sc = paper_configs(4)[cname]
+    sc = dataclasses.replace(sc, policy=ControllerPolicy(ooo=ooo))
+    return dataclasses.replace(sc, **over) if over else sc
+
+
+def _traces(stack, seed=5, spec=SPEC, n_req=N_REQ):
+    return core_traces(seed, [spec] * N_CORES, n_req, stack.n_ranks,
+                       stack.banks_per_rank)
+
+
+# ----------------------------------------------------------------------------
+# degenerate point: window=1 + IN_ORDER is the pre-refactor engine
+# ----------------------------------------------------------------------------
+
+def test_degenerate_point_is_default_engine_all_models():
+    """`window=1` + `IN_ORDER` are the dataclass defaults, so the default
+    run IS the degenerate point (test_golden pins it against the
+    pre-refactor numbers); passing both knobs explicitly must change
+    nothing, bit-for-bit, on every IO model."""
+    assert CoreParams().window == 1
+    assert ControllerPolicy().ooo == OooSelect.IN_ORDER
+    for cname in paper_configs(4):
+        sc = paper_configs(4)[cname]
+        tr = _traces(sc)
+        ref = simulate(sc, tr, SimOptions(HORIZON))
+        got = simulate(_stack(cname), tr, SimOptions(HORIZON),
+                       CoreParams(window=1))
+        for k in ref:
+            assert np.array_equal(np.asarray(got[k]),
+                                  np.asarray(ref[k])), (cname, k)
+
+
+def test_degenerate_point_backend_parity_all_models():
+    """The degenerate point through the pallas kernel equals the scan
+    reference on all five IO models — parity is by construction (the
+    kernel reuses `_sim_core`), pinned anyway."""
+    opts_pl = SimOptions(HORIZON, chunk=256, backend="pallas",
+                         interpret=not _jax_backend_is_tpu())
+    for cname, sc in paper_configs(4).items():
+        tr = _traces(sc)
+        ref = simulate(sc, tr, SimOptions(HORIZON, chunk=256))
+        got = simulate(sc, tr, opts_pl)
+        for k in ref:
+            g, w = np.asarray(got[k]), np.asarray(ref[k])
+            if np.issubdtype(w.dtype, np.floating):
+                assert np.allclose(g, w, rtol=1e-6, atol=0.0), (cname, k)
+            else:
+                assert np.array_equal(g, w), (cname, k)
+
+
+# ----------------------------------------------------------------------------
+# traced selector: the OoO axis costs zero compiles
+# ----------------------------------------------------------------------------
+
+def test_ooo_selector_is_traced():
+    """Every OooSelect value reuses the default policy's executable."""
+    sc = _stack()
+    tr = _traces(sc)
+    simulate(sc, tr, SimOptions(HORIZON))             # warm (may compile)
+    engine.reset_compile_count()
+    for ooo in OooSelect:
+        simulate(_stack(ooo=ooo), tr, SimOptions(HORIZON))
+    assert engine.compile_count() == 0, \
+        "OooSelect leaked into the static compile signature"
+
+
+def test_window_policy_cross_product_adds_zero_compiles():
+    """The acceptance criterion, asserted as a compile-count delta: a
+    sweep over the full OooSelect x existing-preset cross-product costs
+    at most one compile per auto-chunk bucket width — the policy axis
+    itself adds none."""
+    cells = tuple(sweep.make_cell(n, sc, [SPEC] * N_CORES, N_REQ, seed=3)
+                  for n, sc in paper_configs(4).items())
+    pols = tuple(dataclasses.replace(p, ooo=ooo)
+                 for p in policies.POLICY_PRESETS.values()
+                 for ooo in OooSelect)
+    assert len(pols) == len(policies.POLICY_PRESETS) * 4
+    c0 = engine.compile_count()
+    res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), options=SimOptions(
+        6_000), policies=pols))
+    assert engine.compile_count() - c0 <= max(len(set(res.chunks)), 1), \
+        "the window-selection x policy cross-product recompiled"
+    assert len(res.names) == len(cells) * len(pols)
+    tab = res.scalars()
+    for k in ("n_row_hit", "wtr_stall_cycles", "n_ooo_retire"):
+        assert k in sweep.SCALAR_METRICS
+        assert np.isfinite(tab[k]).all(), k
+
+
+def test_window_is_static_compile_knob():
+    """Like q_size: a new window depth is a new executable, the same
+    depth is a cache hit."""
+    sc = _stack()
+    tr = _traces(sc)
+    simulate(sc, tr, SimOptions(HORIZON), CoreParams(window=2))   # warm
+    engine.reset_compile_count()
+    simulate(sc, tr, SimOptions(HORIZON), CoreParams(window=2))
+    assert engine.compile_count() == 0
+    simulate(sc, tr, SimOptions(HORIZON), CoreParams(window=4))
+    assert engine.compile_count() == 1
+
+
+# ----------------------------------------------------------------------------
+# analytic estimate stays an upper bound across the new axis
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [1, 2, 4])
+@pytest.mark.parametrize("ooo", list(OooSelect))
+def test_estimate_upper_bounds_window_axis(window, ooo):
+    """`estimate_service_cycles` must remain a TRUE upper bound on the
+    measured makespan at every (window, OooSelect) point — reordering
+    and deeper windows only ever help, and the estimate prices the
+    through-queue serialisation at the window-scaled occupancy."""
+    from repro.core.smla.analytic import (default_horizon,
+                                          estimate_service_cycles)
+    core = CoreParams(window=window)
+    for cname in ("baseline", "cascaded_mlr", "dedicated_slr"):
+        sc = _stack(cname, ooo=ooo)
+        tr = _traces(sc, seed=0, n_req=60)
+        cell = sweep.SweepCell(cname, sc, tr)
+        est = estimate_service_cycles(sc, tr, core)
+        m = simulate(sc, tr, SimOptions(default_horizon([cell], core)), core)
+        assert bool(np.asarray(m["complete"]).all()), (window, ooo, cname)
+        measured = float(m["makespan_ns"]) / sc.unit_ns
+        assert measured <= est, \
+            f"w{window}/{ooo.name}/{cname}: measured {measured:.0f} > " \
+            f"estimate {est:.0f}"
+
+
+# ----------------------------------------------------------------------------
+# behaviour: the machinery demonstrably engages
+# ----------------------------------------------------------------------------
+
+def test_row_group_converts_conflicts_into_hits_under_fcfs():
+    """Crafted single-bank trace (rows A B A B A B, arriving together):
+    FCFS serves strictly in age order — every access re-opens the row (6
+    activates).  ROW_GROUP's bonus outranks age within the window, so
+    the schedule regroups by row (A A A B B B: 2 activates) and row hits
+    strictly increase.  IN_ORDER + FCFS is the degenerate schedule the
+    bonus must beat."""
+    sc = dataclasses.replace(paper_configs(4)["baseline"], refresh=False)
+    n = 6
+    tr = {"inst": np.zeros((1, n), np.float32),
+          "rank": np.zeros((1, n), np.int32),
+          "bank": np.zeros((1, n), np.int32),
+          "row": np.array([[7, 9, 7, 9, 7, 9]], np.int32),
+          "wr": np.zeros((1, n), np.int32)}
+    def run(ooo):
+        pol = ControllerPolicy(scheduler=SchedPolicy.FCFS, ooo=ooo)
+        return simulate(dataclasses.replace(sc, policy=pol), tr,
+                        SimOptions(2_000))
+    m_in = run(OooSelect.IN_ORDER)
+    m_rg = run(OooSelect.ROW_GROUP)
+    assert int(m_in["n_act"]) == 6 and int(m_in["n_row_hit"]) == 0
+    assert int(m_rg["n_act"]) == 2 and int(m_rg["n_row_hit"]) == 4
+    assert float(m_rg["makespan_ns"]) < float(m_in["makespan_ns"])
+
+
+def test_dir_batch_amortises_write_turnarounds():
+    """On a write-heavy stream DIR_BATCH groups same-direction transfers
+    on each bus, so cycles lost to the tWTR window can only shrink — and
+    on a crafted strictly-alternating R/W conflict trace they strictly
+    do."""
+    sc = _stack()
+    tr = _traces(sc, spec=WorkloadSpec("wr", 60.0, 0.5, write_frac=0.5))
+    m_in = simulate(sc, tr, SimOptions(HORIZON), CoreParams(window=4))
+    m_db = simulate(_stack(ooo=OooSelect.DIR_BATCH), tr,
+                    SimOptions(HORIZON), CoreParams(window=4))
+    assert bool(np.asarray(m_db["complete"]).all())
+    assert int(m_db["n_wr"]) == int(m_in["n_wr"])     # no write lost
+    assert int(m_db["wtr_stall_cycles"]) <= int(m_in["wtr_stall_cycles"])
+    # crafted: one bank, alternating direction, all arrived — batching
+    # by direction must strictly cut the turnaround stalls
+    n = 8
+    alt = {"inst": np.zeros((1, n), np.float32),
+           "rank": np.zeros((1, n), np.int32),
+           "bank": np.zeros((1, n), np.int32),
+           "row": np.full((1, n), 3, np.int32),
+           "wr": np.array([[1, 0, 1, 0, 1, 0, 1, 0]], np.int32)}
+    sc1 = dataclasses.replace(paper_configs(4)["baseline"], refresh=False)
+    def run(ooo):
+        pol = ControllerPolicy(ooo=ooo)
+        return simulate(dataclasses.replace(sc1, policy=pol), alt,
+                        SimOptions(4_000))
+    a_in = run(OooSelect.IN_ORDER)
+    a_db = run(OooSelect.DIR_BATCH)
+    assert int(a_in["wtr_stall_cycles"]) > 0          # stalls to remove
+    assert int(a_db["wtr_stall_cycles"]) < int(a_in["wtr_stall_cycles"])
+
+
+def test_single_entry_window_retires_in_order():
+    """With one MSHR and window=1 each core holds at most one in-flight
+    request — out-of-order retirement is structurally impossible; a
+    deeper window on the same trace demonstrably retires out of program
+    order (the split-transaction observable)."""
+    sc = _stack()
+    tr = _traces(sc)
+    m1 = simulate(sc, tr, SimOptions(HORIZON), CoreParams(mshr=1, window=1))
+    assert bool(np.asarray(m1["complete"]).all())
+    assert int(m1["n_ooo_retire"]) == 0
+    m8 = simulate(sc, tr, SimOptions(HORIZON), CoreParams(mshr=1, window=8))
+    assert bool(np.asarray(m8["complete"]).all())
+    assert int(m8["n_ooo_retire"]) > 0
+    # conservation holds at every depth: nothing lost, nothing doubled
+    assert np.array_equal(np.asarray(m8["served"]), np.asarray(m1["served"]))
+    assert int(m8["n_wr"]) == int(m1["n_wr"]) == int(tr["wr"].sum())
+
+
+def test_deeper_window_never_slows_fixed_work():
+    """The window only widens the scheduler's choice set: with the same
+    policy the measured makespan at window=4 must not exceed window=1 on
+    any IO model (completion required on both sides)."""
+    for cname, sc in paper_configs(4).items():
+        tr = _traces(sc, seed=2)
+        m1 = simulate(sc, tr, SimOptions(HORIZON), CoreParams(window=1))
+        m4 = simulate(sc, tr, SimOptions(HORIZON), CoreParams(window=4))
+        assert bool(np.asarray(m1["complete"]).all()), cname
+        assert bool(np.asarray(m4["complete"]).all()), cname
+        assert float(m4["makespan_ns"]) <= float(m1["makespan_ns"]), cname
+
+
+# ----------------------------------------------------------------------------
+# plumbing: tags, presets, params
+# ----------------------------------------------------------------------------
+
+def test_ooo_policy_tags_and_params():
+    base = "frfcfs-open-ab-inline"        # the four always-present axes
+    assert ControllerPolicy(ooo=OooSelect.ROW_GROUP).tag == f"{base}-ooo-row"
+    assert ControllerPolicy(ooo=OooSelect.DIR_BATCH).tag == f"{base}-ooo-dir"
+    assert ControllerPolicy(ooo=OooSelect.ROW_DIR).tag \
+        == f"{base}-ooo-rowdir"
+    assert "ooo_rowdir" in policies.POLICY_PRESETS
+    p = _stack(ooo=OooSelect.DIR_BATCH).to_params()
+    assert p["ooo_sel"] == int(OooSelect.DIR_BATCH)
+    assert "ooo_sel" in policies.SELECTOR_KEYS
+
+
+def test_legacy_positional_horizon_surface_removed():
+    """PR 6's deprecation window is over: a bare-int horizon (or any
+    non-SimOptions third argument) must raise TypeError, not warn."""
+    sc = _stack()
+    tr = _traces(sc)
+    with pytest.raises(TypeError, match="SimOptions"):
+        simulate(sc, tr, 3_000)
+    with pytest.raises(TypeError):
+        simulate(sc, tr, SimOptions(3_000), chunk=256)

@@ -24,7 +24,7 @@ from repro.core.smla import engine, policies, sweep
 from repro.core.smla.config import (ControllerPolicy, RefreshGranularity,
                                     RowPolicy, SchedPolicy, StackConfig,
                                     WriteDrainPolicy, paper_configs)
-from repro.core.smla.engine import CoreParams, simulate
+from repro.core.smla.engine import CoreParams, SimOptions, simulate
 from repro.core.smla.traces import WorkloadSpec, core_traces
 
 N_CORES = 2
@@ -44,7 +44,7 @@ def _stack(cname="baseline", **over):
 def _run(stack: StackConfig, seed=5, spec=WRITE_SPEC, horizon=HORIZON):
     traces = core_traces(seed, [spec] * N_CORES, N_REQ, stack.n_ranks,
                          stack.banks_per_rank)
-    return simulate(stack, traces, horizon), traces
+    return simulate(stack, traces, SimOptions(horizon)), traces
 
 
 # ----------------------------------------------------------------------------
@@ -57,10 +57,11 @@ def test_policy_selectors_are_traced():
     stack = _stack()
     traces = core_traces(0, [WRITE_SPEC] * N_CORES, N_REQ, stack.n_ranks,
                          stack.banks_per_rank)
-    simulate(stack, traces, HORIZON)                  # warm (may compile)
+    simulate(stack, traces, SimOptions(HORIZON))      # warm (may compile)
     engine.reset_compile_count()
     for pol in policies.non_default_presets().values():
-        simulate(dataclasses.replace(stack, policy=pol), traces, HORIZON)
+        simulate(dataclasses.replace(stack, policy=pol), traces,
+                 SimOptions(HORIZON))
     assert engine.compile_count() == 0, \
         "a policy selector leaked into the static compile signature"
 
@@ -79,7 +80,7 @@ def test_sweep_matches_simulate_every_policy():
             name = f"{cell.name}|{pol.tag}"
             stack = dataclasses.replace(cell.stack, policy=pol)
             chunk = res.chunks[res.names.index(name)]
-            ref = simulate(stack, cell.traces, 6_000, chunk=chunk)
+            ref = simulate(stack, cell.traces, SimOptions(6_000, chunk=chunk))
             for k in ref:
                 assert np.array_equal(np.asarray(res[name][k]),
                                       np.asarray(ref[k])), (name, k)
@@ -126,7 +127,7 @@ def test_per_bank_refresh_blocks_fewer_rank_cycles(cname):
     serving through each refresh."""
     m_ab, traces = _run(_stack(cname))
     m_pb = simulate(_stack(cname, policy=ControllerPolicy(
-        refresh_gran=RefreshGranularity.PER_BANK)), traces, HORIZON)
+        refresh_gran=RefreshGranularity.PER_BANK)), traces, SimOptions(HORIZON))
     assert int(m_ab["refresh_cycles"]) > 0          # machinery fired
     assert int(m_pb["refresh_cycles"]) > 0
     assert int(m_pb["ref_rank_blocked_cycles"]) <= \
@@ -159,9 +160,9 @@ def test_fcfs_refuses_row_hit_reorder():
           "bank": np.zeros((1, 3), np.int32),
           "row": np.array([[7, 9, 7]], np.int32),
           "wr": np.zeros((1, 3), np.int32)}
-    m_fr = simulate(sc, tr, 2_000)
+    m_fr = simulate(sc, tr, SimOptions(2_000))
     m_fc = simulate(dataclasses.replace(
-        sc, policy=ControllerPolicy(scheduler=SchedPolicy.FCFS)), tr, 2_000)
+        sc, policy=ControllerPolicy(scheduler=SchedPolicy.FCFS)), tr, SimOptions(2_000))
     assert int(m_fr["n_act"]) == 2 and int(m_fr["n_row_conflicts"]) == 1
     assert int(m_fc["n_act"]) == 3 and int(m_fc["n_row_conflicts"]) == 2
     assert float(m_fc["makespan_ns"]) > float(m_fr["makespan_ns"])
@@ -179,7 +180,7 @@ def test_drain_policies_complete_and_lose_no_write(drain):
     for cname in paper_configs(4):
         m_in, traces = _run(_stack(cname))
         m_dr = simulate(_stack(cname, policy=ControllerPolicy(
-            write_drain=drain)), traces, HORIZON)
+            write_drain=drain)), traces, SimOptions(HORIZON))
         assert bool(np.asarray(m_dr["complete"]).all()), (cname, drain)
         assert int(m_dr["n_wr"]) == int(m_in["n_wr"]) \
             == int(traces["wr"].sum()), (cname, drain)
@@ -202,7 +203,7 @@ def test_drain_policies_actually_reschedule(drain):
     spec = WorkloadSpec("wr", 60.0, 0.3, write_frac=0.5)
     m_in, traces = _run(sc, spec=spec)
     m_dr = simulate(dataclasses.replace(sc, policy=ControllerPolicy(
-        write_drain=drain)), traces, HORIZON)
+        write_drain=drain)), traces, SimOptions(HORIZON))
     assert bool(np.asarray(m_dr["complete"]).all())
     # held writes concentrate into bursts, never changing the totals
     assert int(m_dr["wr_bus_cycles"]) == int(m_in["wr_bus_cycles"])
@@ -230,7 +231,7 @@ def test_queue_never_drops_requests(q_size):
     stack = _stack()
     traces = core_traces(3, [WRITE_SPEC] * N_CORES, N_REQ, stack.n_ranks,
                          stack.banks_per_rank)
-    m = simulate(stack, traces, HORIZON, core)
+    m = simulate(stack, traces, SimOptions(HORIZON), core)
     served = np.asarray(m["served"])
     assert int(m["n_enqueued"]) == int(served.sum()) + \
         int(m["n_outstanding"])
@@ -246,11 +247,11 @@ def test_q_size_is_static_compile_knob():
     stack = _stack()
     traces = core_traces(0, [WRITE_SPEC] * N_CORES, N_REQ, stack.n_ranks,
                          stack.banks_per_rank)
-    simulate(stack, traces, HORIZON, CoreParams(q_size=16))   # warm
+    simulate(stack, traces, SimOptions(HORIZON), CoreParams(q_size=16))
     engine.reset_compile_count()
-    simulate(stack, traces, HORIZON, CoreParams(q_size=16))
+    simulate(stack, traces, SimOptions(HORIZON), CoreParams(q_size=16))
     assert engine.compile_count() == 0
-    simulate(stack, traces, HORIZON, CoreParams(q_size=8))
+    simulate(stack, traces, SimOptions(HORIZON), CoreParams(q_size=8))
     assert engine.compile_count() == 1
 
 

@@ -25,7 +25,7 @@ from repro.core.smla import engine, policies, sweep
 from repro.core.smla.config import (ControllerPolicy, RefreshPostpone,
                                     SelfRefreshPolicy, StackConfig,
                                     WriteDrainPolicy, paper_configs)
-from repro.core.smla.engine import CoreParams, simulate
+from repro.core.smla.engine import CoreParams, SimOptions, simulate
 from repro.core.smla.traces import WorkloadSpec, core_traces
 
 N_CORES = 2
@@ -54,7 +54,7 @@ def _run(stack: StackConfig, seed=5, spec=WRITE_SPEC, horizon=HORIZON,
          core=CoreParams(), n_cores=N_CORES):
     traces = core_traces(seed, [spec] * n_cores, N_REQ, stack.n_ranks,
                          stack.banks_per_rank)
-    return simulate(stack, traces, horizon, core), traces
+    return simulate(stack, traces, SimOptions(horizon), core), traces
 
 
 # ----------------------------------------------------------------------------
@@ -67,12 +67,12 @@ def test_new_selectors_are_traced():
     stack = _stack()
     traces = core_traces(0, [WRITE_SPEC] * N_CORES, N_REQ, stack.n_ranks,
                          stack.banks_per_rank)
-    simulate(stack, traces, HORIZON)                  # warm (may compile)
+    simulate(stack, traces, SimOptions(HORIZON))                  # warm (may compile)
     engine.reset_compile_count()
     for pol in (SR, POST, SR_POST,
                 *policies.REFRESH_PRESETS.values(),
                 policies.POLICY_PRESETS["all_flipped"]):
-        simulate(dataclasses.replace(stack, policy=pol), traces, HORIZON)
+        simulate(dataclasses.replace(stack, policy=pol), traces, SimOptions(HORIZON))
     assert engine.compile_count() == 0, \
         "a refresh/power selector leaked into the static compile signature"
 
@@ -108,7 +108,7 @@ def test_self_refresh_engages_on_idle_workload():
     exits are measured, disjoint from power-down, and every wake charges
     t_xsr — the makespan can only grow vs the default policy."""
     m0, traces = _run(_stack(), spec=IDLE_SPEC, horizon=60_000)
-    m1 = simulate(_stack(policy=SR), traces, 60_000)
+    m1 = simulate(_stack(policy=SR), traces, SimOptions(60_000))
     assert bool(np.asarray(m1["complete"]).all())
     assert int(m1["sr_cycles"]) > 0 and int(m1["n_sr_exit"]) > 0
     assert 0.0 < float(m1["sr_frac"]) <= 1.0
@@ -129,8 +129,8 @@ def test_self_refresh_reduces_standby_energy_when_idle():
     sc = _stack(t_refi_ns=1200.0)
     traces = core_traces(2, [IDLE_SPEC], N_REQ, sc.n_ranks,
                          sc.banks_per_rank)
-    m0 = simulate(sc, traces, 60_000)
-    m1 = simulate(dataclasses.replace(sc, policy=SR), traces, 60_000)
+    m0 = simulate(sc, traces, SimOptions(60_000))
+    m1 = simulate(dataclasses.replace(sc, policy=SR), traces, SimOptions(60_000))
     assert bool(np.asarray(m1["complete"]).all())
     e0 = E.energy_from_metrics(sc, m0)
     e1 = E.energy_from_metrics(dataclasses.replace(sc, policy=SR), m1)
@@ -143,7 +143,7 @@ def test_self_refresh_suspends_deadlines():
     suspended (the device refreshes internally): fewer external refresh
     events fire than under the default policy on the same trace."""
     m0, traces = _run(_stack(), spec=IDLE_SPEC, horizon=60_000)
-    m1 = simulate(_stack(policy=SR), traces, 60_000)
+    m1 = simulate(_stack(policy=SR), traces, SimOptions(60_000))
     assert int(m0["refresh_cycles"]) > 0
     assert int(m1["refresh_cycles"]) < int(m0["refresh_cycles"])
 
@@ -152,7 +152,7 @@ def test_self_refresh_unreachable_threshold_is_exact_noop():
     """With t_sr beyond the horizon the policy never engages and every
     metric reproduces the default run bit-for-bit."""
     m0, traces = _run(_stack(), spec=IDLE_SPEC)
-    m1 = simulate(_stack(sr_idle_ns=1e9, policy=SR), traces, HORIZON)
+    m1 = simulate(_stack(sr_idle_ns=1e9, policy=SR), traces, SimOptions(HORIZON))
     for k in m0:
         assert np.array_equal(np.asarray(m0[k]), np.asarray(m1[k])), k
 
@@ -161,7 +161,7 @@ def test_self_refresh_conserves_work():
     """Waking ranks must not lose requests on any IO model."""
     for cname in paper_configs(4):
         m0, traces = _run(_stack(cname), spec=IDLE_SPEC, horizon=60_000)
-        m1 = simulate(_stack(cname, policy=SR), traces, 60_000)
+        m1 = simulate(_stack(cname, policy=SR), traces, SimOptions(60_000))
         assert bool(np.asarray(m1["complete"]).all()), cname
         assert np.array_equal(np.asarray(m1["served"]),
                               np.asarray(m0["served"])), cname
@@ -178,7 +178,7 @@ def test_postpone_defers_and_repays():
     loop exits, on every IO model."""
     for cname in paper_configs(4):
         m0, traces = _run(_stack(cname))
-        m1 = simulate(_stack(cname, policy=POST), traces, HORIZON)
+        m1 = simulate(_stack(cname, policy=POST), traces, SimOptions(HORIZON))
         assert bool(np.asarray(m1["complete"]).all()), cname
         assert int(m1["ref_postponed"]) > 0, cname
         assert 1 <= int(m1["ref_debt_max"]) <= policies.DEBT_CAP, cname
@@ -210,7 +210,7 @@ def test_postpone_defers_blackout_out_of_busy_period():
     sc = _stack()
     spec = WorkloadSpec("hot", 80.0, 0.5, write_frac=0.3)
     m0, traces = _run(sc, spec=spec, horizon=60_000)
-    m1 = simulate(dataclasses.replace(sc, policy=POST), traces, 60_000)
+    m1 = simulate(dataclasses.replace(sc, policy=POST), traces, SimOptions(60_000))
     assert int(m1["ref_postponed"]) > 0
     assert int(m1["ref_rank_blocked_cycles"]) <= \
         int(m0["ref_rank_blocked_cycles"])
@@ -240,7 +240,7 @@ def test_drain_when_full_arms_on_fast_transfer_small_queue():
         m_in, traces = _run(sc, spec=spec, core=core)
         dr = dataclasses.replace(sc, policy=ControllerPolicy(
             write_drain=WriteDrainPolicy.DRAIN_WHEN_FULL))
-        m_dr = simulate(dr, traces, HORIZON, core)
+        m_dr = simulate(dr, traces, SimOptions(HORIZON), core)
         assert bool(np.asarray(m_dr["complete"]).all()), cname
         assert int(m_dr["n_drain_bursts"]) >= 1, \
             f"{cname}: DRAIN_WHEN_FULL never armed at q_size=8"
@@ -336,7 +336,7 @@ def test_refresh_presets_axis_in_sweep():
             name = f"{cell.name}|{pol.tag}"
             stack = dataclasses.replace(cell.stack, policy=pol)
             chunk = res.chunks[res.names.index(name)]
-            ref = simulate(stack, cell.traces, 60_000, chunk=chunk)
+            ref = simulate(stack, cell.traces, SimOptions(60_000, chunk=chunk))
             for k in ref:
                 assert np.array_equal(np.asarray(res[name][k]),
                                       np.asarray(ref[k])), (name, k)
@@ -349,10 +349,10 @@ def test_debt_drain_is_chunk_invariant():
     sc = _stack(policy=POST)
     traces = core_traces(5, [WRITE_SPEC] * N_CORES, N_REQ, sc.n_ranks,
                          sc.banks_per_rank)
-    full = simulate(sc, traces, HORIZON, chunk=None)
+    full = simulate(sc, traces, SimOptions(HORIZON, chunk=None))
     assert int(full["ref_debt_end"]) == 0
     for chunk in (100, 512, 2048):
-        m = simulate(sc, traces, HORIZON, chunk=chunk)
+        m = simulate(sc, traces, SimOptions(HORIZON, chunk=chunk))
         for k in full:
             if k == "chunks_run":
                 continue

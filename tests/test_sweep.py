@@ -52,7 +52,8 @@ def test_sweep_matches_simulate_all_models_and_layers():
     assert min(ranks) == 1 and max(ranks) == 8       # mixed-rank batch
     res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), HORIZON))
     for cell, got in zip(cells, res.cells):
-        ref = engine.simulate(cell.stack, cell.traces, HORIZON)
+        ref = engine.simulate(cell.stack, cell.traces,
+                              engine.SimOptions(HORIZON))
         _assert_cell_equal(cell.name, got, ref)
 
 
@@ -75,7 +76,8 @@ def test_sweep_matches_simulate_writes_and_refresh():
     assert engine.compile_count() - c0 <= len(set(res.chunks))
     saw_wr = saw_ref = 0
     for cell, got in zip(cells, res.cells):
-        ref = engine.simulate(cell.stack, cell.traces, HORIZON)
+        ref = engine.simulate(cell.stack, cell.traces,
+                              engine.SimOptions(HORIZON))
         _assert_cell_equal(cell.name, got, ref)
         saw_wr += int(np.asarray(got["n_wr"]))
         saw_ref += int(np.asarray(got["refresh_cycles"]))
@@ -90,7 +92,8 @@ def test_sweep_pads_mixed_request_counts():
     long_ = sweep.make_cell("long", cfgs["baseline"], SPECS, N_REQ, seed=2)
     res = sweep.run_sweep(sweep.SweepSpec((short, long_), HORIZON))
     for cell in (short, long_):
-        ref = engine.simulate(cell.stack, cell.traces, HORIZON)
+        ref = engine.simulate(cell.stack, cell.traces,
+                              engine.SimOptions(HORIZON))
         _assert_cell_equal(cell.name, res[cell.name], ref)
 
 
@@ -157,12 +160,13 @@ def test_to_params_padding_never_referenced():
     """Padded params must not change a single-cell simulation."""
     sc = paper_configs(4)["cascaded_mlr"]            # n_ranks == 1
     cell = sweep.make_cell("mlr", sc, SPECS, N_REQ, seed=11)
-    ref = engine.simulate(sc, cell.traces, HORIZON)
+    ref = engine.simulate(sc, cell.traces, engine.SimOptions(HORIZON))
     padded = sc.to_params(8)
     padded["n_req"] = np.int32(N_REQ)
     batch_params = {k: np.stack([v]) for k, v in padded.items()}
     batch_traces = {k: np.stack([v]) for k, v in cell.traces.items()}
-    out = engine.batched_simulate(batch_params, batch_traces, HORIZON,
+    out = engine.batched_simulate(batch_params, batch_traces,
+                                  engine.SimOptions(HORIZON),
                                   engine.CoreParams(), sc.banks_per_rank)
     got = {k: np.asarray(v)[0] for k, v in out.items()}
     _assert_cell_equal("mlr-padded", got, ref)
@@ -188,10 +192,12 @@ def test_chunked_bit_identity_all_models():
     for name, sc in paper_configs(4).items():
         sc = dataclasses.replace(sc, t_refi_ns=400.0)
         traces = core_traces(7, specs, N_REQ, sc.n_ranks, sc.banks_per_rank)
-        full = engine.simulate(sc, traces, HORIZON, chunk=None)
+        full = engine.simulate(sc, traces,
+                               engine.SimOptions(HORIZON, chunk=None))
         assert int(full["n_wr"]) > 0 and int(full["refresh_cycles"]) > 0
         for chunk in (250, 1024, HORIZON + 500):
-            got = engine.simulate(sc, traces, HORIZON, chunk=chunk)
+            got = engine.simulate(sc, traces,
+                                  engine.SimOptions(HORIZON, chunk=chunk))
             assert set(got) == set(full)
             for k in full:
                 if k == "chunks_run":
@@ -209,7 +215,8 @@ def test_early_exit_runs_fewer_chunks():
     sc = paper_configs(4)["cascaded_mlr"]
     cell = sweep.make_cell("fast", sc, FAST_SPECS, N_REQ, seed=3)
     chunk = 256
-    m = engine.simulate(sc, cell.traces, HORIZON, chunk=chunk)
+    m = engine.simulate(sc, cell.traces,
+                        engine.SimOptions(HORIZON, chunk=chunk))
     assert bool(np.asarray(m["complete"]).all())
     n_max = -(-HORIZON // chunk)
     assert 1 <= int(m["chunks_run"]) < n_max
@@ -231,7 +238,8 @@ def test_makespan_buckets_decouple_fast_from_slow():
                                      FAST_SPECS, N_REQ, seed=i))
     res = sweep.run_sweep(sweep.SweepSpec(tuple(cells), HORIZON, chunk=256))
     for cell in cells:
-        ref = engine.simulate(cell.stack, cell.traces, HORIZON, chunk=256)
+        ref = engine.simulate(cell.stack, cell.traces,
+                              engine.SimOptions(HORIZON, chunk=256))
         _assert_cell_equal(cell.name, res[cell.name], ref,
                            include_chunks=True)
     slow_chunks = int(np.asarray(res["slow"]["chunks_run"]))
@@ -304,7 +312,8 @@ cells = tuple(sweep.make_cell(n, sc, SPECS, 60, seed=3)
               for n, sc in paper_configs(4).items())
 res = sweep.run_sweep(sweep.SweepSpec(cells, 3000, chunk=256))
 for cell in cells:
-    ref = engine.simulate(cell.stack, cell.traces, 3000, chunk=256)
+    ref = engine.simulate(cell.stack, cell.traces,
+                          engine.SimOptions(3000, chunk=256))
     for k in ref:
         a = np.asarray(res[cell.name][k])
         b = np.asarray(ref[k])
@@ -349,9 +358,10 @@ def test_effective_chunk_and_n_chunks_edges():
     sc = paper_configs(4)["cascaded_mlr"]
     traces = core_traces(1, [WORKLOADS[20]], 30, sc.n_ranks,
                          sc.banks_per_rank)
-    full = engine.simulate(sc, traces, 3_000, chunk=None)
+    full = engine.simulate(sc, traces, engine.SimOptions(3_000, chunk=None))
     for chunk in (1, 3_001):
-        m = engine.simulate(sc, traces, 3_000, chunk=chunk)
+        m = engine.simulate(sc, traces,
+                            engine.SimOptions(3_000, chunk=chunk))
         for k in full:
             if k == "chunks_run":
                 continue
@@ -377,8 +387,9 @@ def test_adaptive_chunk_per_bucket():
     assert max(res.chunks) <= engine.DEFAULT_CHUNK       # clamped
     assert all(c in sweep.CHUNK_LADDER for c in res.chunks)
     for cell in cells:
-        ref = engine.simulate(cell.stack, cell.traces, HORIZON,
-                              chunk=by_name[cell.name])
+        ref = engine.simulate(cell.stack, cell.traces,
+                              engine.SimOptions(HORIZON,
+                                                chunk=by_name[cell.name]))
         _assert_cell_equal(cell.name, res[cell.name], ref,
                            include_chunks=True)
 
@@ -415,7 +426,8 @@ def test_estimate_upper_bounds_default_grid():
                                  sc.banks_per_rank)
             cell = sweep.SweepCell(cname, sc, traces)
             est = estimate_service_cycles(sc, traces)
-            m = engine.simulate(sc, traces, default_horizon([cell]))
+            m = engine.simulate(sc, traces,
+                                engine.SimOptions(default_horizon([cell])))
             assert bool(np.asarray(m["complete"]).all()), (layers, cname)
             measured = float(m["makespan_ns"]) / sc.unit_ns
             assert measured <= est, \
@@ -440,7 +452,9 @@ def test_estimate_upper_bounds_policies_and_qsize(pname, q_size):
         traces = core_traces(0, SPECS, 60, sc.n_ranks, sc.banks_per_rank)
         cell = sweep.SweepCell(cname, sc, traces)
         est = estimate_service_cycles(sc, traces, core)
-        m = engine.simulate(sc, traces, default_horizon([cell], core), core)
+        m = engine.simulate(sc, traces,
+                            engine.SimOptions(default_horizon([cell], core)),
+                            core)
         assert bool(np.asarray(m["complete"]).all()), (pname, q_size, cname)
         measured = float(m["makespan_ns"]) / sc.unit_ns
         assert measured <= est, \

@@ -330,10 +330,10 @@ def test_prune_with_policy_axis():
 
 def test_policy_grid_enumeration():
     full = ControllerPolicy.grid()
-    assert len(full) == 192 and len(set(full)) == 192
+    assert len(full) == 768 and len(set(full)) == 768
     assert ControllerPolicy() in full
     pinned = ControllerPolicy.grid(row=ControllerPolicy().row)
-    assert len(pinned) == 96
+    assert len(pinned) == 384
     with pytest.raises(ValueError, match="unknown policy axes"):
         ControllerPolicy.grid(rows=ControllerPolicy().row)
 
